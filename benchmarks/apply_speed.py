@@ -1,0 +1,58 @@
+"""Paper §II-B2 RCG flop model: measured apply time + roofline transfer.
+
+Measures dense vs FAµST (packed BlockFaust, ref path) matmuls on CPU and
+reports the flop model (2·s_tot vs 2·m·n) plus the TPU roofline estimate
+(both compute and memory terms scale by 1/RCG — DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit_us
+from repro.core.compress import BlockFaust, random_block_factor
+from repro.kernels.ops import blockfaust_apply
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+def run(cases=((1024, 4096, 2, 16, 4), (2048, 8192, 2, 16, 4)),
+        batch: int = 128) -> None:
+    for in_dim, out_dim, n_factors, blocks_k, block in [
+        (1024, 4096, 2, 4, 128),
+        (2048, 8192, 2, 4, 128),
+        (2048, 8192, 3, 4, 128),
+    ]:
+        keys = jax.random.split(jax.random.PRNGKey(0), n_factors)
+        dims = [in_dim] + [min(in_dim, out_dim)] * (n_factors - 1) + [out_dim]
+        factors = tuple(
+            random_block_factor(keys[i], dims[i], dims[i + 1], block, block, blocks_k)
+            for i in range(n_factors)
+        )
+        bf = BlockFaust(factors, jnp.asarray(1.0))
+        w = bf.todense()
+        x = jax.random.normal(jax.random.PRNGKey(1), (batch, in_dim))
+
+        dense_fn = jax.jit(lambda v: v @ w)
+        faust_fn = jax.jit(lambda v: blockfaust_apply(v, bf))
+        t_dense = timeit_us(dense_fn, x)
+        t_faust = timeit_us(faust_fn, x)
+        rcg = bf.rcg()
+        dense_flops = 2 * in_dim * out_dim * batch
+        faust_flops = 2 * bf.s_tot * batch
+        # TPU roofline estimate for the unembedding-style shape (bf16)
+        t_tpu_dense = max(dense_flops / PEAK_FLOPS, 2 * in_dim * out_dim / HBM_BW)
+        t_tpu_faust = max(faust_flops / PEAK_FLOPS, 2 * bf.s_tot / HBM_BW)
+        emit(
+            f"apply_{in_dim}x{out_dim}_J{n_factors}",
+            t_faust,
+            f"dense_us={t_dense:.1f};speedup={t_dense / max(t_faust, 1e-9):.2f};"
+            f"RCG={rcg:.2f};flop_gain={dense_flops / faust_flops:.2f};"
+            f"tpu_roofline_gain={t_tpu_dense / t_tpu_faust:.2f}",
+        )
+
+
+if __name__ == "__main__":
+    run()

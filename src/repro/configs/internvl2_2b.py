@@ -1,0 +1,47 @@
+"""internvl2-2b [vlm] — InternViT frontend + InternLM2 backbone
+[arXiv:2404.16821].
+
+24L d_model=2048 16H (GQA kv=8, head_dim=128) d_ff=8192 SwiGLU
+vocab=92553. Per spec the ViT frontend is a STUB: ``input_specs`` provides
+precomputed patch embeddings (256 tokens, InternVL's 448px/pixel-shuffle
+output) substituted at the sequence head.
+"""
+import dataclasses
+
+from repro.configs.base import ArchConfig, DECODE_POLICY, TP_POLICY
+
+CONFIG = ArchConfig(
+    name="internvl2-2b",
+    family="vlm",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab=92553,
+    act="swiglu",
+    norm="rms",
+    stages=((24, ("attn",)),),
+    n_vision_tokens=256,
+    policy=TP_POLICY,
+    policy_decode=DECODE_POLICY,
+)
+
+
+def smoke_config() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG,
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab=117,
+        stages=((2, ("attn",)),),
+        n_vision_tokens=8,
+        dtype="float32",
+        remat=False,
+        attn_chunk=8,
+    )

@@ -1,0 +1,72 @@
+"""llama4-maverick-400b-a17b [moe] — 128 routed experts top-1 + shared
+expert [hf:meta-llama/Llama-4 family].
+
+48L d_model=5120 40H (GQA kv=8, head_dim=128) d_ff=8192 (per expert)
+vocab=202048, SwiGLU, MoE every layer. 40 q-heads don't divide 16 →
+context-parallel attention activations; experts shard over 'model' (EP,
+128/16 = 8 per shard). Early-fusion multimodality is out of scope (text
+tokens only), as the spec's backbone-only rule dictates.
+"""
+import dataclasses
+
+from repro.configs.base import ArchConfig, CP_POLICY, DECODE_POLICY
+from repro.distributed.sharding import ShardingPolicy, default_param_rules
+from repro.layers.moe import MoESpec
+
+# EP over 'model' forces the per-expert ff dim off 'model' (duplicate-axis
+# rule); expert weights are (experts→model × embed→data) 2-D sharded so the
+# 400B total still fits per chip.
+_PARAMS = {**default_param_rules(), "mlp": None}
+LLAMA4_POLICY = ShardingPolicy(seq="model", heads_act=None, params=_PARAMS)
+LLAMA4_DECODE = ShardingPolicy(
+    batch=("pod", "data"), seq=None, heads_act=None, kv_seq="model",
+    params=_PARAMS,
+)
+
+CONFIG = ArchConfig(
+    name="llama4-maverick-400b-a17b",
+    family="moe",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab=202048,
+    act="swiglu",
+    norm="rms",
+    stages=((48, ("moe",)),),
+    rope_base=500000.0,
+    moe=MoESpec(
+        n_experts=128,
+        top_k=1,
+        d_ff=8192,
+        act="swiglu",
+        capacity_factor=1.25,
+        shared_expert_ff=8192,
+    ),
+    policy=LLAMA4_POLICY,
+    policy_decode=LLAMA4_DECODE,
+)
+
+
+def smoke_config() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG,
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=64,
+        vocab=113,
+        stages=((2, ("moe",)),),
+        moe=MoESpec(
+            n_experts=8, top_k=1, d_ff=64, act="swiglu",
+            capacity_factor=8.0,  # drop-free (= E/k) for consistency tests
+            shared_expert_ff=64,
+        ),
+        dtype="float32",
+        remat=False,
+        attn_chunk=8,
+    )

@@ -1,0 +1,49 @@
+"""musicgen-medium [audio] — decoder-only over EnCodec tokens
+[arXiv:2306.05284].
+
+48L d_model=1536 24H (MHA kv=24, head_dim=64) d_ff=6144 GELU vocab=2048,
+4 parallel codebooks (delay pattern handled by the data pipeline; the
+backbone sums codebook embeddings and predicts 4 heads). EnCodec frontend
+is a STUB per spec: shape cells feed token ids / frame embeddings directly.
+No rope (sinusoidal positions). 24 heads don't divide 16 → CP policy.
+"""
+import dataclasses
+
+from repro.configs.base import ArchConfig, CP_POLICY, DECODE_POLICY
+
+CONFIG = ArchConfig(
+    name="musicgen-medium",
+    family="audio",
+    n_layers=48,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=24,
+    head_dim=64,
+    d_ff=6144,
+    vocab=2048,
+    act="gelu",
+    norm="ln",
+    stages=((48, ("attn",)),),
+    rotary_pct=0.0,  # sinusoidal PE instead
+    n_codebooks=4,
+    policy=CP_POLICY,
+    policy_decode=DECODE_POLICY,
+)
+
+
+def smoke_config() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG,
+        n_layers=2,
+        d_model=48,
+        n_heads=4,
+        n_kv_heads=4,
+        head_dim=12,
+        d_ff=96,
+        vocab=67,
+        stages=((2, ("attn",)),),
+        n_codebooks=2,
+        dtype="float32",
+        remat=False,
+        attn_chunk=8,
+    )

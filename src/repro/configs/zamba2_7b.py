@@ -1,0 +1,54 @@
+"""zamba2-7b [hybrid] — Mamba2 backbone + shared attention block
+[arXiv:2411.15242].
+
+81L d_model=3584 (mamba2 ssm_state=64) with a SHARED transformer block
+(32H MHA kv=32, head_dim=112, d_ff=14336 SwiGLU) applied every 6th
+position — one parameter set reused at 13 positions (per-occurrence LoRA
+deltas of the released model omitted; parameter sharing is the
+distribution-relevant property, see DESIGN.md §5). vocab=32000.
+Hybrid SSM → runs long_500k (attention occurrences use SP-sharded caches).
+"""
+import dataclasses
+
+from repro.configs.base import ArchConfig, DECODE_POLICY, TP_POLICY
+from repro.layers.mamba2 import Mamba2Spec
+
+# 81 layers = 13 × (5 mamba + 1 shared-attn) + 3 mamba tail
+STAGES = ((13, ("ssm",) * 5 + ("shared",)), (1, ("ssm",) * 3))
+
+CONFIG = ArchConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    n_layers=81,
+    d_model=3584,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=112,
+    d_ff=14336,
+    vocab=32000,
+    act="swiglu",
+    norm="rms",
+    stages=STAGES,
+    ssm=Mamba2Spec(d_model=3584, d_state=64, headdim=64, expand=2, chunk=256),
+    policy=TP_POLICY,
+    policy_decode=DECODE_POLICY,
+    sub_quadratic=True,
+)
+
+
+def smoke_config() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG,
+        n_layers=9,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        head_dim=16,
+        d_ff=128,
+        vocab=109,
+        stages=((2, ("ssm",) * 3 + ("shared",)), (1, ("ssm",))),
+        ssm=Mamba2Spec(d_model=64, d_state=16, headdim=32, expand=2, chunk=8),
+        dtype="float32",
+        remat=False,
+        attn_chunk=8,
+    )

@@ -1,0 +1,43 @@
+# The paper's primary contribution: multi-layer sparse approximation of
+# linear operators (FAµST), via palm4MSA + hierarchical factorization.
+from repro.core.compress import (
+    BlockFaust,
+    BlockSparseFactor,
+    compress_matrix,
+    pack_dense,
+    random_block_factor,
+)
+from repro.core.faust import Faust, default_init, dense_flops, faust_flops
+from repro.core.hierarchical import (
+    HierarchicalSpec,
+    hadamard_matrix,
+    hadamard_spec,
+    hierarchical_dictionary,
+    hierarchical_factorization,
+    meg_style_spec,
+)
+from repro.core.lipschitz import spectral_norm
+from repro.core.palm4msa import PalmResult, palm4msa, palm4msa_faust, product
+
+__all__ = [
+    "BlockFaust",
+    "BlockSparseFactor",
+    "Faust",
+    "HierarchicalSpec",
+    "PalmResult",
+    "compress_matrix",
+    "default_init",
+    "dense_flops",
+    "faust_flops",
+    "hadamard_matrix",
+    "hadamard_spec",
+    "hierarchical_dictionary",
+    "hierarchical_factorization",
+    "meg_style_spec",
+    "pack_dense",
+    "palm4msa",
+    "palm4msa_faust",
+    "product",
+    "random_block_factor",
+    "spectral_norm",
+]

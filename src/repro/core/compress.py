@@ -1,0 +1,291 @@
+"""Packed block-sparse FAµST representation + dense→FAµST compression.
+
+Deployment format (consumed by the Pallas kernel and FaustLinear):
+
+:class:`BlockSparseFactor` packs a right-multiplication factor
+``F ∈ R^{in × out}`` whose support is a union of aligned ``(bk × bn)``
+blocks, **exactly k blocks per output block-column**:
+
+    values : (n_out_blocks, k, bk, bn)
+    in_idx : (n_out_blocks, k) int32      — input block ids gathered per
+                                            output block
+
+so that ``y[:, o·bn:(o+1)·bn] = Σ_j  x[:, in_idx[o,j]·bk : +bk] @ values[o,j]``.
+
+The gather-on-input/no-scatter layout means one kernel program owns one
+output block — the TPU-friendly shape (DESIGN.md §3).
+
+``compress_matrix`` turns a trained dense weight into this format with the
+paper's hierarchical algorithm using block-granular constraint sets; random
+prescribed-support initialization (for training FAµSTs from scratch) lives
+here too.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import projections as P
+from repro.core.faust import Faust
+from repro.core.hierarchical import HierarchicalSpec, hierarchical_factorization
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class BlockSparseFactor:
+    """Packed block-sparse factor for ``y = x @ F`` (see module docstring)."""
+
+    values: Array  # (O, K, bk, bn)
+    in_idx: Array  # (O, K) int32
+    in_features: int
+    out_features: int
+
+    def tree_flatten(self):
+        return (self.values, self.in_idx), (self.in_features, self.out_features)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        values, in_idx = children
+        return cls(values, in_idx, aux[0], aux[1])
+
+    @property
+    def bk(self) -> int:
+        return self.values.shape[2]
+
+    @property
+    def bn(self) -> int:
+        return self.values.shape[3]
+
+    @property
+    def k(self) -> int:
+        return self.values.shape[1]
+
+    @property
+    def n_out_blocks(self) -> int:
+        return self.values.shape[0]
+
+    @property
+    def n_in_blocks(self) -> int:
+        return -(-self.in_features // self.bk)  # ceil: padded block count
+
+    @property
+    def nnz(self) -> int:
+        return int(np.prod(self.values.shape))
+
+    def todense(self) -> Array:
+        """Materialize F (in_features × out_features)."""
+        o, k, bk, bn = self.values.shape
+        ib = self.n_in_blocks
+        dense = jnp.zeros((ib, o, bk, bn), dtype=self.values.dtype)
+        ob = jnp.broadcast_to(jnp.arange(o)[:, None], (o, k))
+        dense = dense.at[self.in_idx, ob].add(self.values)
+        dense = dense.transpose(0, 2, 1, 3).reshape(ib * bk, o * bn)
+        return dense[: self.in_features, : self.out_features]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class BlockFaust:
+    """Deployment FAµST: ``W ≈ lam · F_1 F_2 ··· F_J`` (right-multiply chain:
+    ``y = lam · (((x @ F_1) @ F_2) ...)``)."""
+
+    factors: tuple[BlockSparseFactor, ...]
+    lam: Array
+
+    def tree_flatten(self):
+        return (self.factors, self.lam), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        factors, lam = children
+        return cls(tuple(factors), lam)
+
+    @property
+    def in_features(self) -> int:
+        return self.factors[0].in_features
+
+    @property
+    def out_features(self) -> int:
+        return self.factors[-1].out_features
+
+    @property
+    def s_tot(self) -> int:
+        return sum(f.nnz for f in self.factors)
+
+    def rc(self) -> float:
+        return self.s_tot / (self.in_features * self.out_features)
+
+    def rcg(self) -> float:
+        return 1.0 / self.rc()
+
+    def todense(self) -> Array:
+        w = self.factors[0].todense()
+        for f in self.factors[1:]:
+            w = w @ f.todense()
+        return self.lam * w
+
+
+# ---------------------------------------------------------------------------
+# Packing
+# ---------------------------------------------------------------------------
+
+
+def _pad_to_multiple(w: Array, bk: int, bn: int) -> Array:
+    i, o = w.shape
+    pi = (-i) % bk
+    po = (-o) % bn
+    if pi or po:
+        w = jnp.pad(w, ((0, pi), (0, po)))
+    return w
+
+
+def pack_dense(w: Array, bk: int, bn: int, k: int) -> BlockSparseFactor:
+    """Pack dense ``F (in, out)`` keeping the top-``k`` energy blocks per
+    output block-column (pads dims up to block multiples; padded blocks have
+    zero energy and are never selected unless k exceeds the live blocks)."""
+    in_f, out_f = w.shape
+    wp = _pad_to_multiple(w, bk, bn)
+    ib, ob = wp.shape[0] // bk, wp.shape[1] // bn
+    blocks = wp.reshape(ib, bk, ob, bn).transpose(2, 0, 1, 3)  # (O, I, bk, bn)
+    energy = jnp.sum(blocks**2, axis=(-1, -2))  # (O, I)
+    k = min(k, ib)
+    _, idx = jax.lax.top_k(energy, k)  # (O, k)
+    idx = jnp.sort(idx, axis=1).astype(jnp.int32)  # sorted for locality
+    values = jnp.take_along_axis(blocks, idx[:, :, None, None], axis=1)
+    return BlockSparseFactor(values, idx, in_f, out_f)
+
+
+def random_block_factor(
+    key: jax.Array,
+    in_features: int,
+    out_features: int,
+    bk: int,
+    bn: int,
+    k: int,
+    scale: float | None = None,
+    dtype=jnp.float32,
+) -> BlockSparseFactor:
+    """Prescribed-support init for training FAµSTs from scratch: k distinct
+    random input blocks per output block, variance-scaled values.
+
+    The effective fan-in of each output unit is ``k·bk``, so values use
+    std = scale/sqrt(k·bk) (LeCun-style on the *sparse* fan-in — the paper's
+    statistical-significance argument: only s_tot parameters).
+    """
+    ib = -(-in_features // bk)
+    ob = -(-out_features // bn)
+    k = min(k, ib)
+    kv, ki = jax.random.split(key)
+    # distinct block ids per row via per-row permutation
+    perm = jax.vmap(lambda kk: jax.random.permutation(kk, ib)[:k])(
+        jax.random.split(ki, ob)
+    )
+    idx = jnp.sort(perm, axis=1).astype(jnp.int32)
+    if scale is None:
+        scale = 1.0
+    std = float(scale / np.sqrt(k * bk))  # python float: keeps param dtype
+    values = (jax.random.normal(kv, (ob, k, bk, bn), dtype=dtype) * std).astype(dtype)
+    return BlockSparseFactor(values, idx, in_features, out_features)
+
+
+# ---------------------------------------------------------------------------
+# Dense weight → BlockFaust via the paper's hierarchical algorithm
+# ---------------------------------------------------------------------------
+
+
+def compress_matrix(
+    w: Array,
+    n_factors: int,
+    bk: int,
+    bn: int,
+    k_first: int,
+    k_mid: int,
+    k_resid: Sequence[int] | None = None,
+    n_iter_two: int = 40,
+    n_iter_global: int = 40,
+) -> tuple[BlockFaust, Faust]:
+    """Factorize a trained weight ``W (in, out)`` into a BlockFaust.
+
+    Orientation: the paper's MEG setting wants the *rightmost* factor to be
+    the rectangular one and the square residuals on the *small* side of W.
+
+      * out <  in: factorize A := Wᵀ (out, in).  Chain F_i = S_iᵀ, so a
+        per-block-ROW budget on each S becomes the per-block-column budget
+        the packed layout needs.
+      * out ≥ in: factorize A := W viewed right-to-left (chain F_i =
+        S_{J+1-i}, untransposed).  Budgets go per-block-COLUMN on each S.
+
+    The rectangular factor S_1 gets ``k_first`` blocks per budget line; the
+    square mid factors ``k_mid``; residual T_ℓ gets ``k_resid[ℓ-1]``
+    (default: geometric ρ=0.7 decay from half-dense, the paper's §V-A
+    schedule at block granularity). All constraints are the paper's
+    Prop.-A.1 projections on the block partition (DESIGN.md §3).
+    """
+    assert bk == bn, "compress_matrix requires square blocks (see DESIGN.md)"
+    in_f, out_f = w.shape
+    wp = _pad_to_multiple(w, bk, bn)
+    transpose = wp.shape[1] < wp.shape[0]  # out < in
+    a = wp.T if transpose else wp  # (m, n) with m ≤ n
+    m, n = a.shape
+    mb = m // bk  # residuals are (m, m): mb × mb blocks
+
+    if k_resid is None:
+        rho = 0.7
+        k_resid = [
+            max(int(round(mb * 0.5 * rho ** (ell - 1))), min(2, mb))
+            for ell in range(1, n_factors)
+        ]
+    # per-line budget orientation on the A side that maps to per-block-col
+    # of the chain side:
+    kind = "blockrow" if transpose else "blockcol"
+    key = "k_per_row" if transpose else "k_per_col"
+    factor_projs = []
+    resid_projs = []
+    for ell in range(1, n_factors):
+        kf = k_first if ell == 1 else k_mid
+        factor_projs.append(P.make_proj(kind, bm=bk, bn=bn, **{key: kf}))
+        resid_projs.append(
+            P.make_proj(kind, bm=bk, bn=bn, **{key: int(k_resid[ell - 1])})
+        )
+    spec = HierarchicalSpec(
+        tuple(factor_projs),
+        tuple(resid_projs),
+        (m,) * (n_factors - 1),
+        n_iter_two=n_iter_two,
+        n_iter_global=n_iter_global,
+    )
+    faust, _ = hierarchical_factorization(a, spec)
+
+    # Map A = S_J ... S_1 to the right-multiply chain on the padded W:
+    #   transpose=True : Wp = Aᵀ = S_1ᵀ S_2ᵀ ... S_Jᵀ → F_i = S_iᵀ
+    #   transpose=False: Wp = A = S_J ... S_1 and x@Wp = ((x@S_J)···)@S_1
+    #                    → F_i = S_{J+1-i}
+    if transpose:
+        dense_chain = [s.T for s in faust.factors]
+    else:
+        dense_chain = list(reversed(list(faust.factors)))
+
+    packed: list[BlockSparseFactor] = []
+    for f in dense_chain:
+        # pack losslessly: k = max live blocks in any output block-column
+        # (≤ the budget by construction of the projections above)
+        k_actual = _max_blocks_per_outcol(f, bk, bn)
+        packed.append(pack_dense(f, bk, bn, k_actual))
+    # restore unpadded feature sizes at the chain ends
+    packed[0] = dataclasses.replace(packed[0], in_features=in_f)
+    packed[-1] = dataclasses.replace(packed[-1], out_features=out_f)
+    return BlockFaust(tuple(packed), faust.lam), faust
+
+
+def _max_blocks_per_outcol(f: Array, bk: int, bn: int) -> int:
+    fp = _pad_to_multiple(f, bk, bn)
+    ib, ob = fp.shape[0] // bk, fp.shape[1] // bn
+    blocks = fp.reshape(ib, bk, ob, bn).transpose(2, 0, 1, 3)
+    energy = np.asarray(jnp.sum(blocks**2, axis=(-1, -2)))  # (O, I)
+    return int(max((energy > 0).sum(axis=1).max(), 1))

@@ -1,0 +1,229 @@
+"""Sparse-coding solvers + dense dictionary learning baseline (paper §V/§VI).
+
+The paper's applications both reduce to iterative solvers whose cost is
+dominated by products with the operator and its adjoint — exactly what a
+FAµST accelerates. All solvers therefore take the operator as a pair of
+callables ``(matvec, rmatvec)`` so either a dense matrix or a
+:class:`~repro.core.faust.Faust` can be plugged in.
+
+Implemented:
+  * batched OMP (greedy, fixed sparsity k) — paper's solver for source
+    localization (§V-B) and denoising (§VI-C);
+  * ISTA (ℓ1) and IHT (ℓ0) — the other two solvers in §V-B;
+  * MOD dense dictionary learning (the DDL baseline; the paper uses K-SVD
+    but notes other DDL algorithms "lead to similar qualitative results" —
+    MOD [ref 44] is the batch-vectorizable choice);
+  * image patch utilities for the denoising workflow (§VI-C).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+MatVec = Callable[[Array], Array]
+
+
+# ---------------------------------------------------------------------------
+# Batched Orthogonal Matching Pursuit
+# ---------------------------------------------------------------------------
+
+
+def _batched_ls(cols: Array, y: Array, ridge: float = 1e-8) -> Array:
+    """Least squares per batch item: cols (L, m, t), y (m, L) → coefs (L, t)."""
+    yt = y.T[:, :, None]  # (L, m, 1)
+    gram = jnp.einsum("lmt,lms->lts", cols, cols)
+    rhs = jnp.einsum("lmt,lmo->lto", cols, yt)[..., 0]
+    eye = jnp.eye(gram.shape[-1], dtype=gram.dtype)
+    sol = jnp.linalg.solve(gram + ridge * eye, rhs[..., None])[..., 0]
+    return sol  # (L, t)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "rmatvec"))
+def omp(y: Array, d: Array, k: int, rmatvec: MatVec | None = None) -> Array:
+    """Batched OMP: returns sparse codes Γ (n, L) with ≤ k atoms per column.
+
+    ``y``: signals (m, L); ``d``: dense dictionary (m, n) (used for the tiny
+    per-support least-squares); ``rmatvec``: adjoint apply used for the
+    *selection* step — the paper's dominant cost ("the computational cost of
+    OMP is dominated by products with Mᵀ", §V-B). Pass ``faust.apply_t`` to
+    get the RCG speedup; defaults to ``d.T @ r``.
+
+    Atom selection normalizes by column norms (the paper notes FAµST atoms
+    are not unit-norm — "a sort of weighted OMP"; we keep selection
+    normalized, reconstruction exact-LS).
+    """
+    m, l = y.shape
+    n = d.shape[1]
+    rmv = rmatvec if rmatvec is not None else (lambda r: d.T @ r)
+    col_norms = jnp.maximum(jnp.linalg.norm(d, axis=0), 1e-12)  # (n,)
+
+    r = y
+    support = jnp.zeros((k, l), dtype=jnp.int32)
+    selected = jnp.zeros((n, l), dtype=bool)
+    coefs = jnp.zeros((k, l), dtype=y.dtype)
+
+    for t in range(k):
+        corr = rmv(r) / col_norms[:, None]  # (n, L)
+        corr = jnp.where(selected, 0.0, jnp.abs(corr))
+        idx = jnp.argmax(corr, axis=0).astype(jnp.int32)  # (L,)
+        support = support.at[t].set(idx)
+        selected = selected.at[idx, jnp.arange(l)].set(True)
+        # LS on the active support (t+1 atoms) per column
+        sub = d.T[support[: t + 1]]  # (t+1, L, m)
+        cols = jnp.transpose(sub, (1, 2, 0))  # (L, m, t+1)
+        sol = _batched_ls(cols, y)  # (L, t+1)
+        coefs = coefs.at[: t + 1].set(sol.T)
+        r = y - jnp.einsum("lmt,lt->ml", cols, sol)
+
+    gamma = jnp.zeros((n, l), dtype=y.dtype)
+    gamma = gamma.at[support, jnp.arange(l)[None, :]].add(coefs)
+    return gamma
+
+
+# ---------------------------------------------------------------------------
+# ISTA / IHT
+# ---------------------------------------------------------------------------
+
+
+def soft_threshold(x: Array, tau: Array) -> Array:
+    return jnp.sign(x) * jnp.maximum(jnp.abs(x) - tau, 0.0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("matvec", "rmatvec", "n_iter", "n")
+)
+def ista(
+    y: Array,
+    matvec: MatVec,
+    rmatvec: MatVec,
+    n: int,
+    lam: float,
+    step: float,
+    n_iter: int = 100,
+) -> Array:
+    """ℓ1-regularized LS by ISTA. ``y`` (m, L) → codes (n, L)."""
+    x0 = jnp.zeros((n, y.shape[1]), dtype=y.dtype)
+
+    def body(_, x):
+        g = rmatvec(matvec(x) - y)
+        return soft_threshold(x - step * g, step * lam)
+
+    return jax.lax.fori_loop(0, n_iter, body, x0)
+
+
+def hard_threshold_topk(x: Array, k: int) -> Array:
+    """Keep top-k per column."""
+    def col(v):
+        _, idx = jax.lax.top_k(jnp.abs(v), k)
+        return jnp.zeros_like(v).at[idx].set(v[idx])
+
+    return jax.vmap(col, in_axes=1, out_axes=1)(x)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("matvec", "rmatvec", "n_iter", "n", "k")
+)
+def iht(
+    y: Array,
+    matvec: MatVec,
+    rmatvec: MatVec,
+    n: int,
+    k: int,
+    step: float,
+    n_iter: int = 100,
+) -> Array:
+    """Iterative Hard Thresholding (k-sparse per column)."""
+    x0 = jnp.zeros((n, y.shape[1]), dtype=y.dtype)
+
+    def body(_, x):
+        x = x + step * rmatvec(y - matvec(x))
+        return hard_threshold_topk(x, k)
+
+    return jax.lax.fori_loop(0, n_iter, body, x0)
+
+
+# ---------------------------------------------------------------------------
+# Dense dictionary learning (DDL baseline, §VI-C)
+# ---------------------------------------------------------------------------
+
+
+def learn_dictionary_mod(
+    y: Array,
+    n_atoms: int,
+    k: int,
+    n_iter: int,
+    key: jax.Array,
+    ridge: float = 1e-6,
+) -> tuple[Array, Array]:
+    """MOD dictionary learning: alternate OMP coding / LS dictionary update.
+
+    Returns (D (m, n_atoms) column-normalized, Γ (n_atoms, L)).
+    """
+    m, l = y.shape
+    # init from random training columns (standard DDL init)
+    idx = jax.random.choice(key, l, (n_atoms,), replace=l < n_atoms)
+    d = y[:, idx]
+    d = d / jnp.maximum(jnp.linalg.norm(d, axis=0, keepdims=True), 1e-12)
+    gamma = None
+    for _ in range(n_iter):
+        gamma = omp(y, d, k)
+        gg = gamma @ gamma.T
+        d = y @ gamma.T @ jnp.linalg.inv(gg + ridge * jnp.eye(n_atoms, dtype=y.dtype))
+        d = d / jnp.maximum(jnp.linalg.norm(d, axis=0, keepdims=True), 1e-12)
+    return d, gamma
+
+
+# ---------------------------------------------------------------------------
+# Image patch utilities (§VI-C denoising workflow)
+# ---------------------------------------------------------------------------
+
+
+def extract_patches(img: Array, patch: int, stride: int = 1) -> Array:
+    """All overlapping (patch × patch) patches → (patch², n_patches)."""
+    h, w = img.shape
+    ys = jnp.arange(0, h - patch + 1, stride)
+    xs = jnp.arange(0, w - patch + 1, stride)
+
+    def get(yx):
+        yy, xx = yx
+        return jax.lax.dynamic_slice(img, (yy, xx), (patch, patch)).reshape(-1)
+
+    grid = jnp.stack(jnp.meshgrid(ys, xs, indexing="ij"), -1).reshape(-1, 2)
+    return jax.vmap(get)(grid).T  # (patch², n)
+
+
+def reconstruct_from_patches(
+    patches: Array, img_shape: tuple[int, int], patch: int, stride: int = 1
+) -> Array:
+    """Average overlapping patches back into an image."""
+    h, w = img_shape
+    ys = jnp.arange(0, h - patch + 1, stride)
+    xs = jnp.arange(0, w - patch + 1, stride)
+    grid = jnp.stack(jnp.meshgrid(ys, xs, indexing="ij"), -1).reshape(-1, 2)
+    acc = jnp.zeros((h, w), dtype=patches.dtype)
+    cnt = jnp.zeros((h, w), dtype=patches.dtype)
+    ones = jnp.ones((patch, patch), dtype=patches.dtype)
+
+    def body(i, carry):
+        acc, cnt = carry
+        yy, xx = grid[i, 0], grid[i, 1]
+        p = patches[:, i].reshape(patch, patch)
+        acc = jax.lax.dynamic_update_slice(
+            acc, jax.lax.dynamic_slice(acc, (yy, xx), (patch, patch)) + p, (yy, xx)
+        )
+        cnt = jax.lax.dynamic_update_slice(
+            cnt, jax.lax.dynamic_slice(cnt, (yy, xx), (patch, patch)) + ones, (yy, xx)
+        )
+        return acc, cnt
+
+    acc, cnt = jax.lax.fori_loop(0, grid.shape[0], body, (acc, cnt))
+    return acc / jnp.maximum(cnt, 1.0)
+
+
+def psnr(x: Array, ref: Array, peak: float = 255.0) -> Array:
+    mse = jnp.mean((x - ref) ** 2)
+    return 10.0 * jnp.log10(peak**2 / jnp.maximum(mse, 1e-12))

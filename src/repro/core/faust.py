@@ -1,0 +1,163 @@
+"""FAµST — Flexible Approximate MUlti-layer Sparse Transform.
+
+The paper's central object (eq. (1)): a linear operator ``A ≈ λ · S_J ··· S_1``
+stored as a product of sparse factors, applied right-to-left.
+
+Two representations live in this framework:
+
+* :class:`Faust` (this module) — factors kept as *dense arrays with enforced
+  sparsity* (zeros where the constraint projection removed entries).  This is
+  the representation the optimization algorithms (``palm4msa``,
+  ``hierarchical``) operate on: shapes are static so everything jits.
+* ``kernels``-side packed block-sparse form (``BlockFaust`` in
+  :mod:`repro.core.compress`) — the deployment representation consumed by the
+  Pallas TPU kernel and by :class:`repro.layers.faust_linear.FaustLinear`.
+
+Conventions (paper §II):
+  factor ``j`` has shape ``(a_{j+1}, a_j)`` with ``a_1 = n`` (input dim) and
+  ``a_{J+1} = m`` (output dim); ``factors[0]`` is ``S_1`` (applied first).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Faust:
+    """A multi-layer sparse approximation ``A ≈ lam * S_J @ ... @ S_1``.
+
+    ``factors[j]`` is ``S_{j+1}`` in paper numbering; ``factors`` is ordered
+    right-to-left in application order (``factors[0]`` touches the input
+    first).
+    """
+
+    factors: tuple[Array, ...]
+    lam: Array  # scalar
+
+    # -- pytree plumbing ---------------------------------------------------
+    def tree_flatten(self):
+        return (self.factors, self.lam), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        factors, lam = children
+        return cls(tuple(factors), lam)
+
+    # -- shapes ------------------------------------------------------------
+    @property
+    def shape(self) -> tuple[int, int]:
+        m = self.factors[-1].shape[0]
+        n = self.factors[0].shape[1]
+        return (m, n)
+
+    @property
+    def n_factors(self) -> int:
+        return len(self.factors)
+
+    def __len__(self) -> int:
+        return len(self.factors)
+
+    # -- linear-operator interface ------------------------------------------
+    def todense(self) -> Array:
+        """Materialize ``lam * S_J ... S_1`` (paper eq. (1))."""
+        out = self.factors[0]
+        for s in self.factors[1:]:
+            out = s @ out
+        return self.lam * out
+
+    def apply(self, x: Array) -> Array:
+        """Apply the operator to ``x`` of shape ``(n,)`` or ``(n, batch)``.
+
+        Costs O(s_tot · batch) flops instead of O(m·n·batch) — the paper's
+        'Speed of multiplication' benefit (§II-B2).
+        """
+        y = x
+        for s in self.factors:
+            y = s @ y
+        return self.lam * y
+
+    def apply_t(self, y: Array) -> Array:
+        """Apply the adjoint ``A^T`` to ``y`` of shape ``(m,)``/``(m, batch)``."""
+        x = y
+        for s in reversed(self.factors):
+            x = s.T @ x
+        return self.lam * x
+
+    def __matmul__(self, x: Array) -> Array:
+        return self.apply(x)
+
+    @property
+    def T(self) -> "Faust":
+        """Transposed FAµST (factor order and each factor transposed)."""
+        return Faust(tuple(s.T for s in reversed(self.factors)), self.lam)
+
+    # -- complexity accounting (paper §II-B) ---------------------------------
+    def nnz_per_factor(self) -> list[int]:
+        return [int(np.count_nonzero(np.asarray(s))) for s in self.factors]
+
+    @property
+    def s_tot(self) -> int:
+        return int(sum(self.nnz_per_factor()))
+
+    def rc(self, dense_nnz: int | None = None) -> float:
+        """Relative Complexity (Definition II.1): s_tot / ||A||_0."""
+        if dense_nnz is None:
+            dense_nnz = int(np.prod(self.shape))
+        return self.s_tot / dense_nnz
+
+    def rcg(self, dense_nnz: int | None = None) -> float:
+        """Relative Complexity Gain = 1 / RC."""
+        return 1.0 / self.rc(dense_nnz)
+
+    # -- diagnostics ---------------------------------------------------------
+    def rel_error_fro(self, a: Array) -> Array:
+        return jnp.linalg.norm(a - self.todense()) / jnp.linalg.norm(a)
+
+    def rel_error_spec(self, a: Array) -> float:
+        """Relative operator-norm error (paper eq. (6))."""
+        from repro.core.lipschitz import spectral_norm
+
+        return float(
+            spectral_norm(a - self.todense()) / (spectral_norm(a) + 1e-30)
+        )
+
+
+def identity_like(shape: tuple[int, int], dtype=jnp.float32) -> Array:
+    """Rectangular identity: ones on the main diagonal (paper §III-C3)."""
+    return jnp.eye(shape[0], shape[1], dtype=dtype)
+
+
+def default_init(
+    dims: Sequence[int], dtype=jnp.float32
+) -> tuple[tuple[Array, ...], Array]:
+    """Paper §III-C3 default initialization.
+
+    ``dims = (a_1, ..., a_{J+1})``; returns factors ``S_1 = 0`` and
+    ``S_j = Id`` for j ≥ 2, with ``λ = 1``.
+    """
+    factors = []
+    n_factors = len(dims) - 1
+    for j in range(n_factors):
+        shape = (dims[j + 1], dims[j])
+        if j == 0:
+            factors.append(jnp.zeros(shape, dtype=dtype))
+        else:
+            factors.append(identity_like(shape, dtype=dtype))
+    return tuple(factors), jnp.asarray(1.0, dtype=dtype)
+
+
+def faust_flops(faust: Faust, batch: int = 1) -> int:
+    """Flop count of ``apply`` on a ``batch`` of vectors: 2·s_tot·batch."""
+    return 2 * faust.s_tot * batch
+
+
+def dense_flops(shape: tuple[int, int], batch: int = 1) -> int:
+    return 2 * int(shape[0]) * int(shape[1]) * batch

@@ -1,0 +1,311 @@
+"""Hierarchical factorization (paper Fig. 5) and the dictionary-learning
+variant (paper Fig. 11).
+
+The residual T_{ℓ-1} is repeatedly split into (T_ℓ, S_ℓ) by a 2-factor
+palm4MSA ("pre-training"), followed by a global palm4MSA refinement over all
+factors introduced so far ("fine-tuning") — the deep-learning parallel the
+paper draws in §IV-A.
+
+This module is host-side orchestration (Python loop over ℓ — the number of
+factors grows, so shapes change per step and each step jits separately);
+every inner solve is a jitted ``palm4msa`` call.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.faust import Faust, default_init, identity_like
+from repro.core.palm4msa import Proj, palm4msa, product
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class HierarchicalSpec:
+    """Constraint schedule for the hierarchical algorithm.
+
+    ``factor_projs[ℓ-1]``  — E_ℓ, constraint for the sparse factor S_ℓ.
+    ``resid_projs[ℓ-1]``   — Ẽ_ℓ, constraint for the residual T_ℓ.
+    ``inner_dims[ℓ-1]``    — a_{ℓ+1}: rows of S_ℓ / cols of T_ℓ (the paper's
+                             MEG setting uses inner_dims = m everywhere).
+    """
+
+    factor_projs: tuple[Proj, ...]
+    resid_projs: tuple[Proj, ...]
+    inner_dims: tuple[int, ...]
+    n_iter_two: int = 50
+    n_iter_global: int = 50
+    alpha: float = 1e-3
+    power_iters: int = 24
+    # "warm": the 2-factor split is initialized so that its product equals
+    # the current residual (new factor = identity, residual carried over) —
+    # the layer-wise-pretraining analog. "paper_default": §III-C3 strict
+    # (S = 0, T = Id). Empirically, warm init is required to reproduce the
+    # paper's Hadamard exactness claim under deterministic top-k
+    # tie-breaking (see EXPERIMENTS.md §Reproduction notes).
+    init: str = "warm"
+
+    @property
+    def n_factors(self) -> int:
+        return len(self.factor_projs) + 1
+
+
+def _two_factor_init(t: Array, d: int, init: str):
+    """Initial (S, T_new) for splitting residual ``t`` → T_new (m,d) S (d,n)."""
+    m, n = t.shape
+    if init == "paper_default":
+        return default_init((n, d, m), dtype=t.dtype)
+    # warm: product equals t at init. Prefer carrying t in the *residual*
+    # slot (verified exact on Hadamard); carry it in the factor slot only
+    # when shapes force it (rectangular first split, MEG-style).
+    if (m, d) == t.shape:
+        s0, t0 = identity_like((d, n), t.dtype), t
+    elif (d, n) == t.shape:
+        s0, t0 = t, identity_like((m, d), t.dtype)
+    else:  # no shape-compatible warm carry; fall back to identities
+        s0, t0 = identity_like((d, n), t.dtype), identity_like((m, d), t.dtype)
+    return (s0, t0), jnp.asarray(1.0, t.dtype)
+
+
+def hierarchical_factorization(a: Array, spec: HierarchicalSpec) -> tuple[Faust, list[float]]:
+    """Paper Fig. 5. Returns the J-factor FAµST and the per-step global loss.
+
+    Factor order bookkeeping: ``palm4msa`` factors are in application order
+    (rightmost first), so at step ℓ the list is [S_1, ..., S_ℓ, T_ℓ].
+    """
+    m, n = a.shape
+    n_splits = len(spec.factor_projs)
+    assert len(spec.resid_projs) == n_splits and len(spec.inner_dims) == n_splits
+
+    t = a  # T_0
+    s_factors: list[Array] = []  # S_1 .. S_ℓ (application order)
+    lam = jnp.asarray(1.0, a.dtype)
+    global_losses: list[float] = []
+
+    for ell in range(1, n_splits + 1):
+        d = spec.inner_dims[ell - 1]
+        # ---- line 3: 2-factor split of the residual ------------------------
+        init_factors, init_lam = _two_factor_init(t, d, spec.init)
+        two = palm4msa(
+            t,
+            init_factors,
+            init_lam,
+            (spec.factor_projs[ell - 1], spec.resid_projs[ell - 1]),
+            spec.n_iter_two,
+            alpha=spec.alpha,
+            power_iters=spec.power_iters,
+        )
+        s_ell, t_ell = two.factors
+        # line 4 (conditioning variant): the paper folds λ' into T_ℓ; we keep
+        # every factor unit-norm and carry the scale in the global λ instead.
+        # Equivalent parameterization of the same constraint sets, but the
+        # PALM step size for T (c = λ²‖L‖²‖R‖²) then scales with λ² instead
+        # of collapsing — without this the last Hadamard refinement amplifies
+        # fp noise by 1/c and destroys an exact factorization (see
+        # EXPERIMENTS.md §Reproduction notes).
+        t = t_ell
+        lam = lam * two.lam
+        s_factors.append(s_ell)
+
+        # ---- line 5: global refinement over [S_1..S_ℓ, T_ℓ] ---------------
+        factors = tuple(s_factors) + (t,)
+        projs = tuple(spec.factor_projs[:ell]) + (spec.resid_projs[ell - 1],)
+        glob = palm4msa(
+            a,
+            factors,
+            lam,
+            projs,
+            spec.n_iter_global,
+            alpha=spec.alpha,
+            power_iters=spec.power_iters,
+            init_feasible=True,  # factors all came out of projections
+        )
+        s_factors = list(glob.factors[:-1])
+        t = glob.factors[-1]
+        lam = glob.lam
+        global_losses.append(float(glob.loss_history[-1]))
+
+    # line 7: S_J ← T_{J-1}
+    return Faust(tuple(s_factors) + (t,), lam), global_losses
+
+
+def hierarchical_dictionary(
+    y: Array,
+    d0: Array,
+    gamma0: Array,
+    spec: HierarchicalSpec,
+    sparse_coding: Callable[[Array, Array], Array],
+) -> tuple[Faust, Array, list[float]]:
+    """Paper Fig. 11 — hierarchical factorization for dictionary learning.
+
+    ``y``: data (m, L); ``d0``: initial dictionary (m, n) (e.g. from DDL);
+    ``gamma0``: initial coefficients (n, L); ``sparse_coding(y, d) → Γ``.
+
+    The global refinement runs on Y with the coefficient matrix as a frozen
+    rightmost factor; the coefficients are then re-estimated by sparse
+    coding against the current FAµST dictionary.
+    """
+    n_splits = len(spec.factor_projs)
+    t = d0
+    gamma = gamma0
+    s_factors: list[Array] = []
+    lam = jnp.asarray(1.0, y.dtype)
+    global_losses: list[float] = []
+
+    for ell in range(1, n_splits + 1):
+        d = spec.inner_dims[ell - 1]
+        init_factors, init_lam = _two_factor_init(t, d, spec.init)
+        two = palm4msa(
+            t,
+            init_factors,
+            init_lam,
+            (spec.factor_projs[ell - 1], spec.resid_projs[ell - 1]),
+            spec.n_iter_two,
+            alpha=spec.alpha,
+            power_iters=spec.power_iters,
+        )
+        s_ell, t_ell = two.factors
+        t = t_ell  # unit-norm residual; scale carried in λ (see above)
+        lam = lam * two.lam
+        s_factors.append(s_ell)
+
+        # global optimization on Y, Γ frozen as rightmost factor
+        factors = (gamma,) + tuple(s_factors) + (t,)
+        projs = (
+            (lambda x: x),  # Γ frozen — projection never applied
+            *spec.factor_projs[:ell],
+            spec.resid_projs[ell - 1],
+        )
+        frozen = (True,) + (False,) * (ell + 1)
+        glob = palm4msa(
+            y,
+            factors,
+            lam,
+            tuple(projs),
+            spec.n_iter_global,
+            frozen=frozen,
+            alpha=spec.alpha,
+            power_iters=spec.power_iters,
+            init_feasible=True,
+        )
+        gamma = glob.factors[0]
+        s_factors = list(glob.factors[1:-1])
+        t = glob.factors[-1]
+        lam = glob.lam
+        global_losses.append(float(glob.loss_history[-1]))
+
+        # coefficient update: Γ ← sparseCoding(Y, T_ℓ ∏ S_j)
+        dict_now = lam * product(tuple(s_factors) + (t,))
+        gamma = sparse_coding(y, dict_now)
+
+    return Faust(tuple(s_factors) + (t,), lam), gamma, global_losses
+
+
+# ---------------------------------------------------------------------------
+# Paper §V-A constraint schedule builders
+# ---------------------------------------------------------------------------
+
+
+def meg_style_spec(
+    m: int,
+    n: int,
+    n_factors: int,
+    k: int,
+    s: int,
+    rho: float = 0.8,
+    big_p: float | None = None,
+    n_iter_two: int = 50,
+    n_iter_global: int = 50,
+    rightmost_col_sparse: bool = True,
+) -> HierarchicalSpec:
+    """The paper's MEG factorization setting (§V-A, Fig. 7).
+
+    S_1: (m × n) with k-sparse columns (or global k·n sparsity);
+    S_j, j ≥ 2: (m × m) with global sparsity s;
+    T_ℓ: (m × m) with global sparsity P·ρ^{ℓ-1}.
+    """
+    from repro.core import projections as P
+
+    if big_p is None:
+        big_p = 1.4 * m * m
+    factor_projs: list[Proj] = []
+    resid_projs: list[Proj] = []
+    inner_dims: list[int] = []
+    for ell in range(1, n_factors):
+        if ell == 1:
+            if rightmost_col_sparse:
+                factor_projs.append(P.make_proj("col", k=k))
+            else:
+                factor_projs.append(P.make_proj("global", k=k * n))
+        else:
+            factor_projs.append(P.make_proj("global", k=s))
+        n_keep = int(min(big_p * (rho ** (ell - 1)), m * m))
+        resid_projs.append(P.make_proj("global", k=n_keep))
+        inner_dims.append(m)
+    return HierarchicalSpec(
+        tuple(factor_projs),
+        tuple(resid_projs),
+        tuple(inner_dims),
+        n_iter_two=n_iter_two,
+        n_iter_global=n_iter_global,
+    )
+
+
+def hadamard_spec(
+    n: int,
+    n_iter_two: int = 50,
+    n_iter_global: int = 50,
+    constraints: str = "splincol",
+    init: str = "warm",
+) -> HierarchicalSpec:
+    """Paper §IV-C: Ẽ_ℓ = {‖T‖₀ ≤ n²/2^ℓ}, E_ℓ = {‖S‖₀ ≤ 2n}, J = log2(n).
+
+    ``constraints="splincol"`` (default) enforces the same budget distributed
+    per row *and* column (2/row-col for factors, n/2^ℓ for residuals) — the
+    FAµST-toolbox choice, which matches the butterfly structure and is what
+    reaches exactness under deterministic tie-breaking. ``"global"`` is the
+    paper-literal total-count variant (reported in the benchmark ablation).
+    """
+    from repro.core import projections as P
+
+    n_factors = int(n).bit_length() - 1
+    assert 2**n_factors == n, "Hadamard requires n = 2^N"
+    if constraints == "splincol":
+        factor_projs = tuple(
+            P.make_proj("splincol", k=2) for _ in range(n_factors - 1)
+        )
+        resid_projs = tuple(
+            P.make_proj("splincol", k=max(n // (2**ell), 2))
+            for ell in range(1, n_factors)
+        )
+    elif constraints == "global":
+        factor_projs = tuple(
+            P.make_proj("global", k=2 * n) for _ in range(n_factors - 1)
+        )
+        resid_projs = tuple(
+            P.make_proj("global", k=max(n * n // (2**ell), 2 * n))
+            for ell in range(1, n_factors)
+        )
+    else:
+        raise ValueError(constraints)
+    inner_dims = (n,) * (n_factors - 1)
+    return HierarchicalSpec(
+        tuple(factor_projs),
+        resid_projs,
+        inner_dims,
+        n_iter_two=n_iter_two,
+        n_iter_global=n_iter_global,
+        init=init,
+    )
+
+
+def hadamard_matrix(n: int, dtype=jnp.float32) -> Array:
+    """Dense Hadamard matrix, n = 2^N (Sylvester construction)."""
+    h = jnp.asarray([[1.0]], dtype=dtype)
+    while h.shape[0] < n:
+        h = jnp.block([[h, h], [h, -h]])
+    return h

@@ -1,0 +1,219 @@
+"""palm4MSA — PALM for Multi-layer Sparse Approximation (paper Fig. 4).
+
+Minimizes  Ψ(S_1..S_J, λ) = ½‖A − λ·S_J···S_1‖_F² + Σ_j δ_{E_j}(S_j)
+by alternating projected-gradient steps on each factor (step size 1/c_j with
+c_j = (1+α)·λ²·‖L‖₂²·‖R‖₂², Appendix B) followed by the closed-form λ
+update λ = tr(AᵀÂ)/tr(ÂᵀÂ).
+
+Implementation notes
+--------------------
+* ``factors`` is a tuple ordered ``(S_1, ..., S_J)`` — application order,
+  ``factors[0]`` touches the input first (see :mod:`repro.core.faust`).
+* The factor sweep (j = 1..J) is unrolled in Python (J is small and static);
+  the outer iteration loop is a ``lax.scan`` so the whole solve is one jitted
+  computation emitting the loss history.
+* Suffix products L_j = S_J···S_{j+1} are precomputed per sweep from the
+  *pre-sweep* factors (valid: factor ℓ > j is untouched when j is updated);
+  prefix products R_j = S_{j-1}···S_1 are accumulated with the *updated*
+  factors, matching the paper's Gauss–Seidel ordering exactly.
+* ``frozen`` marks factors that participate in the product but are not
+  updated — used by the dictionary-learning variant (paper Fig. 11) where
+  the coefficient matrix Γ is "taken into account but kept fixed".
+* Distribution: everything here is plain jnp, so running under a mesh with
+  sharded ``a`` and sharded factor constraints distributes the factorization
+  (used by ``core.compress`` for model-scale matrices).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.faust import Faust, default_init
+from repro.core.lipschitz import spectral_norm_sq
+
+Array = jax.Array
+Proj = Callable[[Array], Array]
+
+_EPS = 1e-12
+
+
+class PalmState(NamedTuple):
+    factors: tuple[Array, ...]
+    lam: Array
+
+
+class PalmResult(NamedTuple):
+    factors: tuple[Array, ...]
+    lam: Array
+    loss_history: Array  # (n_iter,) data-fidelity ½‖A − λ∏S‖_F²
+
+
+def product(factors: Sequence[Array]) -> Array:
+    """``S_J ... S_1`` for factors in application order (S_1 first)."""
+    out = factors[0]
+    for s in factors[1:]:
+        out = s @ out
+    return out
+
+
+def data_fidelity(a: Array, factors: Sequence[Array], lam: Array) -> Array:
+    r = a - lam * product(factors)
+    return 0.5 * jnp.vdot(r, r).real
+
+
+def _sweep(
+    a: Array,
+    factors: tuple[Array, ...],
+    lam: Array,
+    projs: tuple[Proj, ...],
+    frozen: tuple[bool, ...],
+    alpha: float,
+    power_iters: int,
+    grad_floor_rel: float = 1e-6,
+) -> PalmState:
+    """One full PALM sweep: update S_1..S_J then λ.
+
+    ``grad_floor_rel``: a factor update is skipped when ‖∇‖_F falls below
+    ``grad_floor_rel · λ·‖L‖₂‖R‖₂·‖A‖_F`` — the fp-noise scale of the
+    residual product chain. Near an exact factorization the true gradient
+    is 0 but the computed one is rounding noise; dividing that noise by a
+    tiny curvature c = λ²‖L‖₂²‖R‖₂² would otherwise destroy the iterate
+    (observed on deep Hadamard chains; EXPERIMENTS.md §Reproduction notes).
+    """
+    n = len(factors)
+    a_norm = jnp.linalg.norm(a)
+
+    # Suffix products L_j = S_J ... S_{j+1} (paper notation), computed from
+    # the pre-sweep factors. suffix[j] corresponds to factor index j (0-based).
+    suffix: list[Array | None] = [None] * n
+    acc: Array | None = None
+    for j in range(n - 1, -1, -1):
+        suffix[j] = acc  # None means identity
+        acc = factors[j] if acc is None else acc @ factors[j]
+
+    new_factors: list[Array] = []
+    prefix: Array | None = None  # R_j = S_{j-1} ... S_1, from updated factors
+    lam2 = lam * lam
+    for j in range(n):
+        s = factors[j]
+        if frozen[j]:
+            s_new = s
+        else:
+            left = suffix[j]
+            right = prefix
+            # Lipschitz modulus (Appendix B): λ²‖R‖₂²‖L‖₂²
+            l2 = (
+                jnp.asarray(1.0, a.dtype)
+                if left is None
+                else spectral_norm_sq(left, iters=power_iters)
+            )
+            r2 = (
+                jnp.asarray(1.0, a.dtype)
+                if right is None
+                else spectral_norm_sq(right, iters=power_iters)
+            )
+            c = (1.0 + alpha) * lam2 * l2 * r2 + _EPS
+            # ∇_{S_j} H = λ Lᵀ (λ L S R − A) Rᵀ
+            lsr = s if right is None else s @ right
+            lsr = lsr if left is None else left @ lsr
+            resid = lam * lsr - a
+            g = resid if left is None else left.T @ resid
+            g = g if right is None else g @ right.T
+            g = lam * g
+            # noise floor damps the *gradient step* only — the constraint
+            # projection always applies (feasible points are fixed points)
+            theta = grad_floor_rel * jnp.abs(lam) * jnp.sqrt(l2 * r2) * a_norm
+            step = jnp.where(jnp.linalg.norm(g) > theta, 1.0, 0.0) / c
+            s_new = projs[j](s - g * step)
+        new_factors.append(s_new)
+        prefix = s_new if prefix is None else s_new @ prefix
+
+    a_hat = prefix  # full updated product
+    num = jnp.vdot(a, a_hat).real
+    den = jnp.vdot(a_hat, a_hat).real
+    lam_new = num / jnp.maximum(den, _EPS)
+    return PalmState(tuple(new_factors), lam_new)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "projs", "n_iter", "frozen", "alpha", "power_iters", "keep_best",
+        "init_feasible",
+    ),
+)
+def palm4msa(
+    a: Array,
+    factors: tuple[Array, ...],
+    lam: Array,
+    projs: tuple[Proj, ...],
+    n_iter: int,
+    frozen: tuple[bool, ...] | None = None,
+    alpha: float = 1e-3,
+    power_iters: int = 24,
+    keep_best: bool = True,
+    init_feasible: bool = False,
+) -> PalmResult:
+    """Run ``n_iter`` PALM sweeps (paper Fig. 4). Returns loss history.
+
+    ``projs`` must be a tuple of hashable callables (use
+    ``repro.core.projections.make_proj`` or module-level functions) — they
+    are static under jit.
+
+    ``keep_best`` returns the iterate with the lowest data-fidelity seen
+    (monotone acceptance). On matrices with tied-magnitude entries
+    (Hadamard) the top-k projections are *set-valued*: a tiny gradient
+    nudge can flip the selected support and discontinuously destroy an
+    exact product — descent is not guaranteed through such flips, so we
+    never return a worse iterate than the best visited.
+
+    ``init_feasible``: when the initial factors already satisfy their
+    constraint sets (hierarchical *global refinements* — every factor came
+    out of a projection), the init participates in best-iterate selection,
+    making refinement a no-worse-than-init operation. Two-factor splits
+    pass False: their warm init (identity/residual carry) is deliberately
+    infeasible and must not be returned.
+    """
+    if frozen is None:
+        frozen = (False,) * len(factors)
+    assert len(projs) == len(factors) == len(frozen)
+
+    def step(carry, _):
+        state, best_state, best_loss = carry
+        new = _sweep(a, state.factors, state.lam, projs, frozen, alpha, power_iters)
+        loss = data_fidelity(a, new.factors, new.lam)
+        if keep_best:
+            improved = loss < best_loss
+            best_state = jax.tree_util.tree_map(
+                lambda n_, b: jnp.where(improved, n_, b), new, best_state
+            )
+            best_loss = jnp.where(improved, loss, best_loss)
+        else:
+            best_state, best_loss = new, loss
+        return (new, best_state, best_loss), loss
+
+    init = PalmState(tuple(factors), jnp.asarray(lam, a.dtype))
+    init_loss = data_fidelity(a, init.factors, init.lam)
+    seed_loss = init_loss if init_feasible else jnp.asarray(jnp.inf, init_loss.dtype)
+    carry0 = (init, init, seed_loss)
+    (final, best, best_loss), losses = jax.lax.scan(
+        step, carry0, None, length=n_iter
+    )
+    out = best if keep_best else final
+    return PalmResult(out.factors, out.lam, losses)
+
+
+def palm4msa_faust(
+    a: Array,
+    dims: Sequence[int],
+    projs: tuple[Proj, ...],
+    n_iter: int,
+    **kw,
+) -> tuple[Faust, Array]:
+    """Convenience: default init (§III-C3) + palm4msa → :class:`Faust`."""
+    factors, lam = default_init(dims, dtype=a.dtype)
+    res = palm4msa(a, factors, lam, projs, n_iter, **kw)
+    return Faust(res.factors, res.lam), res.loss_history

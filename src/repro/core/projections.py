@@ -1,0 +1,231 @@
+"""Projection operators onto the paper's constraint sets (Appendix A).
+
+Every set has the form  E = { S : sparsity(S) ∧ ||S||_F = 1 }  and the
+projection is: *keep the allowed entries with largest magnitude (per
+partition cell), zero the rest, renormalize to unit Frobenius norm*
+(Propositions A.1 / A.2).
+
+All projections here:
+  * are pure jnp and jit-able with static sparsity parameters;
+  * return an array of the same shape;
+  * renormalize to ||·||_F = 1 unless ``normalize=False``;
+  * are exactly idempotent up to fp rounding (property-tested).
+
+The *block* projections are the TPU adaptation described in DESIGN.md §3:
+Prop. A.1 with the index partition given by aligned (bm × bn) blocks, which
+keeps the projection inside the paper's framework while producing
+MXU-friendly supports.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+EPS = 1e-12
+
+
+def _normalize(x: Array) -> Array:
+    nrm = jnp.linalg.norm(x)
+    return jnp.where(nrm > EPS, x / jnp.maximum(nrm, EPS), jnp.zeros_like(x))
+
+
+def _topk_mask_flat(v: Array, k: int) -> Array:
+    """0/1 mask keeping the k entries of |v| with largest magnitude.
+
+    Exact-k (ties broken deterministically by lax.top_k index order).
+    """
+    k = int(k)
+    if k >= v.size:
+        return jnp.ones_like(v)
+    _, idx = jax.lax.top_k(jnp.abs(v), k)
+    mask = jnp.zeros(v.shape, dtype=v.dtype).at[idx].set(1.0)
+    return mask
+
+
+def proj_global_topk(x: Array, k: int, normalize: bool = True) -> Array:
+    """P onto {||S||_0 ≤ k, ||S||_F = 1} — paper §III-C1 (global sparsity)."""
+    flat = x.reshape(-1)
+    out = (flat * _topk_mask_flat(flat, k)).reshape(x.shape)
+    return _normalize(out) if normalize else out
+
+
+def proj_col_topk(x: Array, k: int, normalize: bool = True) -> Array:
+    """P onto {||s_i||_0 ≤ k ∀ columns i, ||S||_F = 1} (Prop. A.1 with the
+    partition {columns} and s_i = k)."""
+    mask = jax.vmap(functools.partial(_topk_mask_flat, k=k), in_axes=1, out_axes=1)(x)
+    out = x * mask
+    return _normalize(out) if normalize else out
+
+
+def proj_row_topk(x: Array, k: int, normalize: bool = True) -> Array:
+    """Per-row k-sparsity (Prop. A.1 with the partition {rows})."""
+    mask = jax.vmap(functools.partial(_topk_mask_flat, k=k), in_axes=0, out_axes=0)(x)
+    out = x * mask
+    return _normalize(out) if normalize else out
+
+
+def proj_splincol(x: Array, k: int, normalize: bool = True) -> Array:
+    """Union of per-row and per-column top-k supports ("splincol" in the
+    FAµST toolbox): keep entries in the top-k of their row OR column.
+
+    This distributes the sparsity budget across all rows and columns —
+    structurally matching butterfly-like factors (2 nnz per row *and*
+    column) and avoiding the mass-concentration degeneracy global top-k
+    exhibits on matrices with many equal-magnitude entries (Hadamard).
+    """
+    rmask = jax.vmap(functools.partial(_topk_mask_flat, k=k), in_axes=0, out_axes=0)(x)
+    cmask = jax.vmap(functools.partial(_topk_mask_flat, k=k), in_axes=1, out_axes=1)(x)
+    out = x * jnp.maximum(rmask, cmask)
+    return _normalize(out) if normalize else out
+
+
+def proj_support(x: Array, support: Array, normalize: bool = True) -> Array:
+    """Fixed (prescribed) support — Prop. A.1 degenerate case.
+
+    This is the constraint used when *training* FAµST layers from scratch:
+    the support is chosen once and only values are learned.
+    """
+    out = x * support.astype(x.dtype)
+    return _normalize(out) if normalize else out
+
+
+def proj_id(x: Array, normalize: bool = False) -> Array:
+    """No sparsity constraint (used for frozen/unconstrained factors)."""
+    return _normalize(x) if normalize else x
+
+
+def proj_triu(x: Array, normalize: bool = True) -> Array:
+    """Upper-triangular constraint (Prop. A.1: partition + full-cell keep)."""
+    out = jnp.triu(x)
+    return _normalize(out) if normalize else out
+
+
+def proj_diag(x: Array, normalize: bool = True) -> Array:
+    out = jnp.diag(jnp.diag(x)) if x.shape[0] == x.shape[1] else x * jnp.eye(
+        x.shape[0], x.shape[1], dtype=x.dtype
+    )
+    return _normalize(out) if normalize else out
+
+
+# ---------------------------------------------------------------------------
+# Block-granular projections (TPU adaptation, DESIGN.md §3)
+# ---------------------------------------------------------------------------
+
+
+def _block_view(x: Array, bm: int, bn: int) -> Array:
+    """(m, n) → (m//bm, n//bn, bm, bn) view by reshape/transpose."""
+    m, n = x.shape
+    assert m % bm == 0 and n % bn == 0, (x.shape, bm, bn)
+    return x.reshape(m // bm, bm, n // bn, bn).transpose(0, 2, 1, 3)
+
+
+def _block_unview(b: Array) -> Array:
+    r, c, bm, bn = b.shape
+    return b.transpose(0, 2, 1, 3).reshape(r * bm, c * bn)
+
+
+def proj_block_topk(
+    x: Array, bm: int, bn: int, n_blocks: int, normalize: bool = True
+) -> Array:
+    """Keep the ``n_blocks`` (bm × bn) blocks with largest Frobenius energy.
+
+    Prop. A.1 applied to the partition H = {aligned blocks}: for supports
+    that are unions of ≤ n_blocks cells, <vec(U_J), vec(S)> is maximized by
+    the cells with largest ||U_{C_i}||_F — same argument as Prop. A.2's
+    support selection.
+    """
+    blocks = _block_view(x, bm, bn)
+    energy = jnp.sum(blocks**2, axis=(-1, -2)).reshape(-1)
+    mask = _topk_mask_flat(jnp.sqrt(energy + 0.0), n_blocks)
+    mask = mask.reshape(blocks.shape[0], blocks.shape[1], 1, 1)
+    out = _block_unview(blocks * mask)
+    return _normalize(out) if normalize else out
+
+
+def proj_blockrow_topk(
+    x: Array, bm: int, bn: int, k_per_row: int, normalize: bool = True
+) -> Array:
+    """Keep the top-``k_per_row`` blocks (by energy) in every block-row.
+
+    This is the packing-friendly variant: the exported representation is a
+    rectangular (rows × k) block table consumed by the Pallas kernel.
+    """
+    blocks = _block_view(x, bm, bn)  # (R, C, bm, bn)
+    energy = jnp.sqrt(jnp.sum(blocks**2, axis=(-1, -2)) + 0.0)  # (R, C)
+    mask = jax.vmap(functools.partial(_topk_mask_flat, k=k_per_row))(energy)
+    out = _block_unview(blocks * mask[:, :, None, None])
+    return _normalize(out) if normalize else out
+
+
+def proj_blockcol_topk(
+    x: Array, bm: int, bn: int, k_per_col: int, normalize: bool = True
+) -> Array:
+    """Keep the top-``k_per_col`` blocks (by energy) in every block-column.
+
+    Used when packing factors for right-multiplication ``y = x @ F`` (the
+    FaustLinear layout): each *output* block gathers from exactly k input
+    blocks, giving a rectangular packed table.
+    """
+    blocks = _block_view(x, bm, bn)  # (R, C, bm, bn)
+    energy = jnp.sqrt(jnp.sum(blocks**2, axis=(-1, -2)) + 0.0)  # (R, C)
+    mask = jax.vmap(
+        functools.partial(_topk_mask_flat, k=k_per_col), in_axes=1, out_axes=1
+    )(energy)
+    out = _block_unview(blocks * mask[:, :, None, None])
+    return _normalize(out) if normalize else out
+
+
+def proj_piecewise_const(
+    x: Array, cell_ids: Array, n_cells: int, s: int, normalize: bool = True
+) -> Array:
+    """Prop. A.2: unit-norm matrices constant over cells C_i, ≤ s nonzero
+    cells.
+
+    ``cell_ids`` is an int array (same shape as x) mapping entries to cells
+    in [0, n_cells); entries with cell_id == -1 are forced to zero.
+    """
+    valid = (cell_ids >= 0).astype(x.dtype)
+    ids = jnp.clip(cell_ids, 0, n_cells - 1)
+    counts = jax.ops.segment_sum(valid.reshape(-1), ids.reshape(-1), n_cells)
+    sums = jax.ops.segment_sum((x * valid).reshape(-1), ids.reshape(-1), n_cells)
+    counts = jnp.maximum(counts, 1.0)
+    # score per Prop. A.2: |u_i| / sqrt(|C_i|)
+    score = jnp.abs(sums) / jnp.sqrt(counts)
+    keep = _topk_mask_flat(score, s)
+    a = (sums / counts) * keep  # constant value per kept cell (pre-normalization)
+    out = a[ids] * valid
+    return _normalize(out) if normalize else out
+
+
+# ---------------------------------------------------------------------------
+# Constraint-set descriptors
+# ---------------------------------------------------------------------------
+# palm4msa receives projections as plain callables Array -> Array. These
+# helpers build them with the sparsity parameters baked in (hashable for jit
+# through closure capture; palm4msa treats them as static).
+
+
+def make_proj(kind: str, **kw) -> Callable[[Array], Array]:
+    table = {
+        "global": lambda x: proj_global_topk(x, kw["k"]),
+        "col": lambda x: proj_col_topk(x, kw["k"]),
+        "row": lambda x: proj_row_topk(x, kw["k"]),
+        "splincol": lambda x: proj_splincol(x, kw["k"]),
+        "support": lambda x: proj_support(x, kw["support"]),
+        "block": lambda x: proj_block_topk(x, kw["bm"], kw["bn"], kw["n_blocks"]),
+        "blockrow": lambda x: proj_blockrow_topk(
+            x, kw["bm"], kw["bn"], kw["k_per_row"]
+        ),
+        "blockcol": lambda x: proj_blockcol_topk(
+            x, kw["bm"], kw["bn"], kw["k_per_col"]
+        ),
+        "id": lambda x: proj_id(x, normalize=kw.get("normalize", False)),
+    }
+    if kind not in table:
+        raise ValueError(f"unknown projection kind {kind!r}")
+    return table[kind]

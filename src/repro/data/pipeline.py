@@ -1,0 +1,117 @@
+"""Deterministic, restartable, shardable synthetic data pipeline.
+
+Production posture without external data dependencies: a counter-based
+(stateless-RNG) token stream — batch ``i`` is a pure function of
+``(seed, i)``, so
+
+* restart: the iterator state is a single integer in the checkpoint;
+* sharding: each data-parallel host materializes only its slice (per-host
+  ``host_slice``), matching `jax.make_array_from_process_local_data`;
+* determinism: no RNG state to lose; re-running step i reproduces batch i
+  exactly (elastic restarts re-slice the same global batch onto a new mesh).
+
+The synthetic distribution is a Zipfian-ish mixture with induced bigram
+structure so language-model training shows a real, decreasing loss (used by
+the end-to-end example), not white noise.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    n_codebooks: int = 1  # audio archs
+    n_vision_tokens: int = 0  # vlm archs
+    d_model: int = 0  # for vision embed stand-ins
+
+
+@dataclasses.dataclass
+class DataState:
+    """Checkpointable iterator state."""
+
+    step: int = 0
+
+
+def _batch_rng(cfg: DataConfig, step: int) -> np.random.Generator:
+    return np.random.default_rng(
+        np.random.SeedSequence([cfg.seed, step, 0xFA05])
+    )
+
+
+def _synthetic_tokens(rng: np.random.Generator, shape, vocab: int) -> np.ndarray:
+    """Zipf-weighted unigram stream + deterministic bigram successor mixing:
+    with p=0.5 the next token is f(prev) — learnable structure."""
+    ranks = np.arange(1, vocab + 1)
+    probs = 1.0 / ranks
+    probs /= probs.sum()
+    flat = rng.choice(vocab, size=int(np.prod(shape)), p=probs).reshape(shape)
+    # bigram mixing along the last axis
+    succ_mult = 6364136223846793005 % vocab or 1
+    mix = rng.random(shape) < 0.5
+    out = flat.copy()
+    for t in range(1, shape[-1]):
+        prev = out[..., t - 1]
+        out[..., t] = np.where(mix[..., t], (prev * succ_mult + 13) % vocab, flat[..., t])
+    return out.astype(np.int32)
+
+
+def global_batch(cfg: DataConfig, step: int) -> dict[str, np.ndarray]:
+    """The full global batch for ``step`` (host-independent)."""
+    rng = _batch_rng(cfg, step)
+    if cfg.n_codebooks > 1:
+        tokens = _synthetic_tokens(
+            rng, (cfg.global_batch, cfg.n_codebooks, cfg.seq_len), cfg.vocab
+        )
+    else:
+        tokens = _synthetic_tokens(rng, (cfg.global_batch, cfg.seq_len), cfg.vocab)
+    batch = {"tokens": tokens}
+    if cfg.n_vision_tokens:
+        batch["vision_embeds"] = (
+            rng.standard_normal(
+                (cfg.global_batch, cfg.n_vision_tokens, cfg.d_model), dtype=np.float32
+            )
+            * 0.02
+        )
+    return batch
+
+
+def host_slice(cfg: DataConfig, step: int, host_index: int, n_hosts: int) -> dict:
+    """This host's contiguous slice of the global batch (batch-major)."""
+    full = global_batch(cfg, step)
+    per = cfg.global_batch // n_hosts
+    lo, hi = host_index * per, (host_index + 1) * per
+    return {k: v[lo:hi] for k, v in full.items()}
+
+
+class DataIterator:
+    """Stateful wrapper with checkpointable state."""
+
+    def __init__(self, cfg: DataConfig, state: DataState | None = None):
+        self.cfg = cfg
+        self.state = state or DataState()
+
+    def __iter__(self) -> Iterator[dict]:
+        return self
+
+    def __next__(self) -> dict:
+        b = global_batch(self.cfg, self.state.step)
+        self.state.step += 1
+        return b
+
+    def checkpoint_state(self) -> dict:
+        return {"step": self.state.step}
+
+    def restore_state(self, s: dict) -> None:
+        self.state.step = int(s["step"])

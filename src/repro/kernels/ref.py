@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for the block-sparse FAµST apply (and its gradients).
+
+These are the *reference semantics* for the Pallas kernel in
+``bsr_matmul.py`` and the default implementation used inside models (the
+gather+einsum form carries the correct FLOP count into
+``compiled.cost_analysis()``, which the roofline analysis reads).
+
+Layout (see ``repro.core.compress.BlockSparseFactor``):
+    values : (O, K, bk, bn)   — K gathered input blocks per output block
+    in_idx : (O, K) int32     — which input block each one is
+    y[..., o·bn:(o+1)·bn] = Σ_k  x[..., in_idx[o,k]·bk : +bk] @ values[o,k]
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def bsr_matmul_ref(x: Array, values: Array, in_idx: Array) -> Array:
+    """``y = x @ F`` for packed block-sparse F.
+
+    ``x``: (..., IB·bk) — feature dim already padded to a block multiple.
+    Returns (..., O·bn).
+    """
+    o, k, bk, bn = values.shape
+    batch_shape = x.shape[:-1]
+    ib = x.shape[-1] // bk
+    xb = x.reshape(*batch_shape, ib, bk)
+    gathered = xb[..., in_idx, :]  # (..., O, K, bk)
+    y = jnp.einsum(
+        "...okb,okbn->...on",
+        gathered,
+        values,
+        preferred_element_type=x.dtype,
+    )
+    return y.reshape(*batch_shape, o * bn)
+
+
+def bsr_matmul_dx(dy: Array, values: Array, in_idx: Array, in_dim: Array | int) -> Array:
+    """Cotangent wrt x: scatter-add of per-block contributions."""
+    o, k, bk, bn = values.shape
+    batch_shape = dy.shape[:-1]
+    ib = in_dim // bk
+    dyb = dy.reshape(*batch_shape, o, bn)
+    contrib = jnp.einsum("...on,okbn->...okb", dyb, values)  # (..., O, K, bk)
+    dxb = jnp.zeros((*batch_shape, ib, bk), dtype=dy.dtype)
+    dxb = dxb.at[..., in_idx, :].add(contrib)
+    return dxb.reshape(*batch_shape, ib * bk)
+
+
+def bsr_matmul_dvalues(x: Array, dy: Array, in_idx: Array, block: tuple[int, int]) -> Array:
+    """Cotangent wrt values: per selected block, xᵀ·dy over all batch dims."""
+    bk, bn = block
+    o, k = in_idx.shape
+    batch_shape = x.shape[:-1]
+    ib = x.shape[-1] // bk
+    xb = x.reshape(*batch_shape, ib, bk)
+    gathered = xb[..., in_idx, :]  # (..., O, K, bk)
+    dyb = dy.reshape(*batch_shape, o, bn)
+    return jnp.einsum("...okb,...on->okbn", gathered, dyb)
+
+
+def blockfaust_apply_ref(x: Array, factors, lam: Array) -> Array:
+    """Chain apply ``y = lam · (((x @ F_1) @ F_2) ...)`` with padding/slicing
+    at the chain boundaries (pure-jnp oracle for the kernel chain)."""
+    y = x
+    for f in factors:
+        pad = f.n_in_blocks * f.bk - y.shape[-1]
+        if pad:
+            y = jnp.pad(y, [(0, 0)] * (y.ndim - 1) + [(0, pad)])
+        y = bsr_matmul_ref(y, f.values, f.in_idx)
+        if y.shape[-1] != f.out_features:
+            y = y[..., : f.out_features]
+    return lam * y

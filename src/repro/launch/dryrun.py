@@ -1,0 +1,217 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede any jax import (device count locks at first init).
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this produces, in experiments/dryrun/<arch>__<cell>__<mesh>.json:
+  * compiled.memory_analysis()  — bytes/device proof-of-fit,
+  * compiled.cost_analysis()    — HLO FLOPs / bytes for §Roofline,
+  * parsed collective-op bytes (while-loop trip counts resolved) from the
+    post-SPMD optimized HLO,
+  * wall-clock lowering/compile times.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun [--arch X] [--cell Y] \
+      [--mesh single|multi|both] [--force]
+
+(No ``from __future__`` here — the XLA_FLAGS lines above must be the very
+first statements in the file.)
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import SHAPES, cells_for
+from repro.launch import roofline
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import batch_specs, cache_specs
+from repro.launch.steps import (
+    abstract_train_state,
+    make_sharded_decode,
+    make_sharded_prefill,
+    make_sharded_train_step,
+)
+from repro.optim.adamw import AdamWConfig
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "../../../experiments/dryrun")
+
+
+def _specify(tree):
+    """Concrete pytree → matching ShapeDtypeStructs (cache specs etc.)."""
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree
+    )
+
+
+def apply_variant(cfg, variant: str | None):
+    """Beyond-paper config variants for §Perf hillclimbs."""
+    import dataclasses
+
+    from repro.layers.faust_linear import FaustSpec
+
+    if not variant:
+        return cfg
+    if variant == "faust":
+        # FAµST unembedding (k=8) + FFN projections (k=4), 128-blocks, J=2
+        return dataclasses.replace(
+            cfg,
+            faust_unembed=FaustSpec(n_factors=2, block=128, k=8),
+            faust_mlp=FaustSpec(n_factors=2, block=128, k=4) if cfg.d_ff else None,
+            tie_embeddings=False,
+        )
+    if variant == "faust_unembed":
+        return dataclasses.replace(
+            cfg,
+            faust_unembed=FaustSpec(n_factors=2, block=128, k=8),
+            tie_embeddings=False,
+        )
+    if variant == "remat_attn":
+        # iteration-3 lever: checkpoint the flash chunk scan body
+        return dataclasses.replace(cfg, attn_chunk=1024)
+    raise ValueError(variant)
+
+
+def run_cell(arch: str, cell_name: str, multi_pod: bool, variant: str | None = None) -> dict:
+    cfg = apply_variant(get_config(arch), variant)
+    cell = SHAPES[cell_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    opt_cfg = AdamWConfig()
+    record: dict = {
+        "arch": cfg.name,
+        "cell": cell_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": int(np.prod(list(mesh.shape.values()))),
+    }
+
+    t0 = time.monotonic()
+    with mesh:
+        if cell.kind == "train":
+            step = make_sharded_train_step(cfg, opt_cfg, mesh)
+            state = abstract_train_state(cfg, opt_cfg)
+            batch = batch_specs(cfg, cell)
+            lowered = step.lower(state, batch)
+        elif cell.kind == "prefill":
+            step = make_sharded_prefill(cfg, mesh, cell)
+            params = _abstract_params(cfg)
+            batch = batch_specs(cfg, cell)
+            caches = cache_specs(cfg, cell)
+            lowered = step.lower(params, batch, caches)
+        else:  # decode
+            step = make_sharded_decode(cfg, mesh, cell)
+            params = _abstract_params(cfg)
+            batch = batch_specs(cfg, cell)
+            caches = cache_specs(cfg, cell)
+            lowered = step.lower(params, batch["tokens"], caches)
+        record["lower_s"] = round(time.monotonic() - t0, 2)
+
+        t0 = time.monotonic()
+        compiled = lowered.compile()
+        record["compile_s"] = round(time.monotonic() - t0, 2)
+
+        mem = compiled.memory_analysis()
+        record["memory_analysis"] = _mem_dict(mem)
+        cost = compiled.cost_analysis()
+        record["cost_analysis"] = {
+            k: float(v)
+            for k, v in (cost or {}).items()
+            if isinstance(v, (int, float)) and k in ("flops", "bytes accessed", "optimal_seconds")
+        }
+        t0 = time.monotonic()
+        hlo = compiled.as_text()
+        record["collectives"] = roofline.collective_stats(hlo)
+        # trip-count-corrected per-device flops/bytes (cost_analysis counts
+        # while bodies once — see hlo_cost.py)
+        from repro.launch.hlo_cost import hlo_cost
+
+        record["hlo_cost"] = hlo_cost(hlo)
+        record["hlo_parse_s"] = round(time.monotonic() - t0, 2)
+        record["hlo_bytes"] = len(hlo)
+    return record
+
+
+def _abstract_params(cfg):
+    from repro.models import lm
+
+    return lm.abstract_params(cfg)
+
+
+def _mem_dict(mem) -> dict:
+    if mem is None:
+        return {}
+    out = {}
+    for k in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def result_path(arch: str, cell: str, multi_pod: bool, variant: str | None = None) -> str:
+    mesh = "2x16x16" if multi_pod else "16x16"
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    suffix = f"__{variant}" if variant else ""
+    return os.path.join(RESULTS_DIR, f"{arch}__{cell}__{mesh}{suffix}.json")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--cell", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--variant", default=None)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ARCH_IDS
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    failures = []
+    for arch in archs:
+        cfg = get_config(arch)
+        cells = [args.cell] if args.cell else cells_for(cfg)
+        for cell in cells:
+            for multi_pod in meshes:
+                path = result_path(arch, cell, multi_pod, args.variant)
+                if os.path.exists(path) and not args.force:
+                    print(f"[skip] {path}")
+                    continue
+                tag = f"{arch} × {cell} × {'multi' if multi_pod else 'single'}"
+                if args.variant:
+                    tag += f" × {args.variant}"
+                print(f"[dryrun] {tag} ...", flush=True)
+                try:
+                    rec = run_cell(arch, cell, multi_pod, args.variant)
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                    print(
+                        f"[ok] {tag}: compile {rec['compile_s']}s "
+                        f"flops={rec['cost_analysis'].get('flops', 0):.3e}",
+                        flush=True,
+                    )
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    failures.append((tag, repr(e)))
+                    print(f"[FAIL] {tag}: {e!r}", flush=True)
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for tag, err in failures:
+            print(" ", tag, err)
+        raise SystemExit(1)
+    print("\nall dry-run cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,240 @@
+"""Trip-count-aware FLOP/byte accounting from optimized HLO text.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE — with layer
+stacks under ``lax.scan`` that understates flops/bytes by the layer count.
+This module re-derives both quantities from the HLO with while trip counts
+resolved (XLA annotates ``known_trip_count`` in each while's
+backend_config — every ``lax.scan`` qualifies):
+
+* **flops**: every ``dot`` contributes 2·|result|·Π(contracting dims)
+  (looked up from the lhs operand's type); elementwise/reduce ops
+  contribute |result| — matmul-dominated programs are insensitive to the
+  latter. Fusion bodies are traversed (the dots live there).
+* **bytes**: for every instruction in a *control-flow* computation (entry,
+  while bodies/conds, conditional branches) bytes = Σ operand sizes +
+  result size. Fusion internals are NOT traversed — operands/results at
+  the fusion call site are exactly XLA's fusion memory model.
+
+Both are per-device quantities when run on the post-SPMD partitioned
+module (shapes in the text are the per-device shards).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+from repro.launch.roofline import (
+    _ARRAY_RE,
+    _type_bytes,
+    match_header,
+    while_trip,
+)
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "log", "tanh", "rsqrt", "sqrt", "negate", "abs", "and",
+    "or", "xor", "select", "compare", "convert", "floor", "ceil", "sign",
+    "cosine", "sine", "logistic", "expm1", "log1p", "atan2", "remainder",
+    "clamp",
+}
+_REDUCE_LIKE = {"reduce", "reduce-window"}
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\(.+?\)|[\w\[\],{}\/ ]+?)\s+([\w\-]+)\("
+)
+
+# Fusions whose operands pass through to the result unchanged (same array
+# type) above this size are treated as aliased in-place carries (XLA's
+# while-loop buffer aliasing): e.g. a fused cache dynamic-update-slice takes
+# the whole (L,B,S,KH,D) stack and returns it — real HBM traffic is the
+# token slice, not 2× the cache. See EXPERIMENTS.md §Perf iteration 1.
+_ALIAS_THRESHOLD_BYTES = 32 * 2**20
+
+_ARRAY_STR_RE = re.compile(r"\w+\[[\d,]*\]")
+
+
+def _num_elements(type_str: str) -> int:
+    n_tot = 0
+    for _, dims in _ARRAY_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        n_tot += n
+    return n_tot
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _ARRAY_RE.search(type_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",") if d] if dims else []
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    flops: float = 0.0
+    bytes_cf: float = 0.0  # control-flow-level bytes (fusion-boundary model)
+    whiles: list = dataclasses.field(default_factory=list)  # (trip, body, cond)
+    flop_calls: list = dataclasses.field(default_factory=list)
+    cf_calls: list = dataclasses.field(default_factory=list)
+
+
+def parse(hlo: str) -> dict[str, _Comp]:
+    comps: dict[str, _Comp] = {}
+    cur: _Comp | None = None
+    symbols: dict[str, str] = {}
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        hname = match_header(line)
+        if hname is not None:
+            cur = _Comp(hname)
+            comps[cur.name] = cur
+            symbols = {}
+            # computation parameters: `name (p: T1, q: T2) -> ...` — register
+            args = raw[raw.find("(") + 1 : raw.rfind("->")]
+            for pm in re.finditer(r"([\w\.\-]+)\s*:\s*([\w\[\],() ]+?)(?:,\s*[\w\.\-]+\s*:|\)$|\)\s*$)", args):
+                symbols[pm.group(1)] = pm.group(2)
+            continue
+        if cur is None:
+            continue
+        im = _INSTR_RE.match(raw)
+        if not im:
+            # try `%name = type parameter(i)` style w/o parens? parameter has parens — ok
+            continue
+        name, type_str, op = im.groups()
+        rest = raw[im.end():]
+        symbols[name] = type_str
+        call_args = rest.split("),")[0]
+        operand_names = re.findall(r"%([\w\.\-]+)", call_args)
+
+        # bytes at control-flow level: operands + result, with structural
+        # ops corrected (they don't stream their full operands):
+        if op in ("get-tuple-element", "tuple", "parameter", "bitcast",
+                  "reshape", "after-all", "constant", "iota", "while",
+                  "conditional", "call"):
+            pass  # free or accounted inside callee
+        elif op == "dynamic-slice":
+            cur.bytes_cf += 2 * _type_bytes(type_str)  # read slice + write
+        elif op == "dynamic-update-slice":
+            upd = (
+                _type_bytes(symbols[operand_names[1]])
+                if len(operand_names) > 1 and operand_names[1] in symbols
+                else _type_bytes(type_str)
+            )
+            cur.bytes_cf += 2 * upd  # in-place DUS touches update bytes
+        else:
+            operand_bytes = 0
+            for oname in operand_names:
+                if oname in symbols:
+                    operand_bytes += _type_bytes(symbols[oname])
+            total = operand_bytes + _type_bytes(type_str)
+            if op == "fusion":
+                # subtract aliased pass-through pairs (see _ALIAS_THRESHOLD)
+                res_arrays = list(_ARRAY_STR_RE.findall(type_str))
+                for oname in operand_names:
+                    if oname not in symbols:
+                        continue
+                    for arr in _ARRAY_STR_RE.findall(symbols[oname]):
+                        ab = _type_bytes(arr)
+                        if ab >= _ALIAS_THRESHOLD_BYTES and arr in res_arrays:
+                            res_arrays.remove(arr)
+                            total -= 2 * ab
+            cur.bytes_cf += max(total, 0.0)
+
+        if op == "dot":
+            operands = re.findall(r"%([\w\.\-]+)", call_args)
+            contract = 1
+            mcd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rest)
+            if operands and operands[0] in symbols and mcd:
+                ldims = _shape_dims(symbols[operands[0]])
+                for i in (int(x) for x in mcd.group(1).split(",") if x):
+                    if i < len(ldims):
+                        contract *= ldims[i]
+            cur.flops += 2.0 * _num_elements(type_str) * contract
+        elif op == "convolution":
+            operands = re.findall(r"%([\w\.\-]+)", call_args)
+            k = 1
+            if len(operands) > 1 and operands[1] in symbols:
+                rd = _shape_dims(symbols[operands[1]])
+                if rd:
+                    k = max(int(np.prod(rd[:-1])), 1)
+            cur.flops += 2.0 * _num_elements(type_str) * k
+        elif op in _ELEMENTWISE:
+            cur.flops += _num_elements(type_str)
+        elif op in _REDUCE_LIKE:
+            operands = re.findall(r"%([\w\.\-]+)", call_args)
+            if operands and operands[0] in symbols:
+                cur.flops += _num_elements(symbols[operands[0]])
+        elif op == "while":
+            mb = re.search(r"body=%?([\w\.\-]+)", rest)
+            mc = re.search(r"condition=%?([\w\.\-]+)", rest)
+            if mb:
+                cur.whiles.append(
+                    (while_trip(raw), mb.group(1), mc.group(1) if mc else None)
+                )
+        elif op == "conditional":
+            for grp in re.findall(r"branch_computations=\{([^}]*)\}", rest):
+                cur.cf_calls.extend(re.findall(r"%?([\w\.\-]+)", grp))
+            for n in re.findall(r"(?:true|false)_computation=%?([\w\.\-]+)", rest):
+                cur.cf_calls.append(n)
+        if op in ("fusion", "call", "map", "sort", "scatter",
+                  "select-and-scatter", "custom-call", "all-reduce",
+                  "reduce-scatter", "reduce", "reduce-window"):
+            cur.flop_calls.extend(re.findall(r"(?:calls|to_apply)=%?([\w\.\-]+)", rest))
+    return comps
+
+
+def _flops_of(comps, name, memo, stack) -> float:
+    if name in memo:
+        return memo[name]
+    if name not in comps or name in stack:
+        return 0.0
+    c = comps[name]
+    total = c.flops
+    stack = stack | {name}
+    for callee in c.flop_calls + c.cf_calls:
+        total += _flops_of(comps, callee, memo, stack)
+    for trips, body, cond in c.whiles:
+        total += trips * (
+            _flops_of(comps, body, memo, stack)
+            + (_flops_of(comps, cond, memo, stack) if cond else 0.0)
+        )
+    memo[name] = total
+    return total
+
+
+def _bytes_of(comps, name, memo, stack) -> float:
+    if name in memo:
+        return memo[name]
+    if name not in comps or name in stack:
+        return 0.0
+    c = comps[name]
+    total = c.bytes_cf
+    stack = stack | {name}
+    for callee in c.cf_calls:  # conditionals only — NOT fusion internals
+        total += _bytes_of(comps, callee, memo, stack)
+    for trips, body, cond in c.whiles:
+        total += trips * (
+            _bytes_of(comps, body, memo, stack)
+            + (_bytes_of(comps, cond, memo, stack) if cond else 0.0)
+        )
+    memo[name] = total
+    return total
+
+
+def hlo_cost(hlo: str) -> dict:
+    comps = parse(hlo)
+    m = re.search(r"ENTRY\s+%?([\w\.\-]+)", hlo)
+    entry = m.group(1) if m else next((n for n in comps if "main" in n), None)
+    if entry is None:
+        return {"flops": 0.0, "bytes": 0.0, "note": "no entry"}
+    return {
+        "flops": _flops_of(comps, entry, {}, frozenset()),
+        "bytes": _bytes_of(comps, entry, {}, frozenset()),
+    }

@@ -1,0 +1,24 @@
+"""Production meshes (spec-mandated shapes).
+
+single-pod: (16, 16) over ("data", "model")   — 256 chips
+multi-pod : (2, 16, 16) over ("pod", "data", "model") — 512 chips
+
+Functions, not module constants, so importing never touches jax device
+state. The dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count=512
+*before* any jax import (see dryrun.py); real TPU launches rely on the
+default device discovery.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2):
+    """Small mesh for tests (requires host-device override)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,128 @@
+"""Generate the §Dry-run / §Roofline tables from experiments/dryrun/*.json.
+
+Usage: PYTHONPATH=src python -m repro.launch.report [--mesh 16x16]
+Writes experiments/roofline.md (included by EXPERIMENTS.md) and prints the
+three hillclimb candidates (worst roofline fraction, most collective-bound,
+most FAµST-representative).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+import numpy as np
+
+from repro.configs import ALIASES, ARCH_IDS, get_config
+from repro.configs.base import SHAPES, active_param_count, param_count
+from repro.launch.roofline import HBM_BW, LINK_BW, PEAK_FLOPS
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "../../../experiments/dryrun")
+
+
+def model_flops(arch: str, cell_name: str) -> float:
+    """Analytic MODEL_FLOPS: 6·N·D (train), 2·N·tokens (prefill/decode);
+    MoE archs use active params (spec: 6·N_active·D)."""
+    cfg = get_config(arch)
+    n_act = active_param_count(cfg)
+    cell = SHAPES[cell_name]
+    if cell.kind == "train":
+        return 6.0 * n_act * cell.global_batch * cell.seq_len
+    if cell.kind == "prefill":
+        return 2.0 * n_act * cell.global_batch * cell.seq_len
+    return 2.0 * n_act * cell.global_batch  # decode: one token / sequence
+
+
+def load_records(mesh: str) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+        recs[-1]["_arch_id"] = os.path.basename(path).split("__")[0]
+    return recs
+
+
+def analyze(rec: dict) -> dict:
+    n_dev = rec["n_devices"]
+    flops = rec["hlo_cost"]["flops"]  # per-device, trip-corrected
+    bytes_ = rec["hlo_cost"]["bytes"]
+    coll = rec["collectives"]["total_bytes"]  # per-device
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_ / HBM_BW
+    collective_s = coll / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    total = sum(terms.values())
+    mf = model_flops(rec["_arch_id"], rec["cell"])
+    useful_ratio = mf / (flops * n_dev) if flops else 0.0
+    return {
+        **{f"{k}_s": v for k, v in terms.items()},
+        "dominant": dominant,
+        "roofline_fraction": terms[dominant] / total if total else 0.0,
+        "model_flops": mf,
+        "useful_flops_ratio": useful_ratio,
+        "mem_bytes_per_dev": rec.get("memory_analysis", {}).get(
+            "argument_size_in_bytes", 0
+        )
+        + rec.get("memory_analysis", {}).get("temp_size_in_bytes", 0),
+    }
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}µs"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--out", default=os.path.join(DRYRUN_DIR, "../roofline.md"))
+    args = ap.parse_args()
+
+    recs = load_records(args.mesh)
+    rows = []
+    for rec in recs:
+        a = analyze(rec)
+        rows.append((rec, a))
+
+    lines = [
+        f"## Roofline table — mesh {args.mesh} "
+        f"(v5e: {PEAK_FLOPS/1e12:.0f} TF/s bf16, {HBM_BW/1e9:.0f} GB/s HBM, "
+        f"{LINK_BW/1e9:.0f} GB/s link)",
+        "",
+        "| arch | cell | compute | memory | collective | dominant | frac | "
+        "MODEL_FLOPS/HLO | arg+temp GiB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec, a in rows:
+        lines.append(
+            f"| {rec['_arch_id']} | {rec['cell']} | {fmt_s(a['compute_s'])} | "
+            f"{fmt_s(a['memory_s'])} | {fmt_s(a['collective_s'])} | "
+            f"{a['dominant']} | {a['roofline_fraction']:.2f} | "
+            f"{a['useful_flops_ratio']:.2f} | "
+            f"{a['mem_bytes_per_dev']/2**30:.2f} |"
+        )
+    out = "\n".join(lines) + "\n"
+    with open(args.out, "w") as f:
+        f.write(out)
+    print(out)
+
+    # hillclimb candidates
+    train_rows = [(r, a) for r, a in rows if r["cell"] in ("train_4k", "prefill_32k")]
+    worst = min(rows, key=lambda ra: ra[1]["useful_flops_ratio"] or 9e9)
+    coll_bound = max(rows, key=lambda ra: ra[1]["collective_s"] / max(sum(
+        (ra[1]["compute_s"], ra[1]["memory_s"], ra[1]["collective_s"])), 1e-12))
+    print("\n# hillclimb candidates")
+    print("worst useful-flops ratio:", worst[0]["_arch_id"], worst[0]["cell"],
+          worst[1]["useful_flops_ratio"])
+    print("most collective-bound:", coll_bound[0]["_arch_id"], coll_bound[0]["cell"],
+          fmt_s(coll_bound[1]["collective_s"]))
+    print("FAµST-representative: gemma3_27b decode/train (262k-vocab unembed)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run's inputs.
+
+``input_specs(cfg, cell)`` builds the abstract batch for a shape cell;
+``state_specs`` / ``cache_specs`` build the abstract train state / decode
+caches. Nothing here allocates device memory.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, SHAPES, ShapeCell
+from repro.models import lm
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_specs(cfg: ArchConfig, cell: ShapeCell) -> dict:
+    b = cell.global_batch
+    if cell.kind == "decode":
+        s = 1
+    else:
+        s = cell.seq_len
+    out = {}
+    if cfg.n_codebooks > 1:
+        out["tokens"] = SDS((b, cfg.n_codebooks, s), jnp.int32)
+    else:
+        out["tokens"] = SDS((b, s), jnp.int32)
+    if cfg.n_vision_tokens and cell.kind != "decode":
+        out["vision_embeds"] = SDS(
+            (b, cfg.n_vision_tokens, cfg.d_model), jnp.float32
+        )
+    return out
+
+
+def cache_specs(cfg: ArchConfig, cell: ShapeCell):
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return jax.eval_shape(
+        functools.partial(
+            lm.make_caches, cfg, cell.global_batch, cell.seq_len, dtype=dtype
+        )
+    )
+
+
+def input_specs(cfg: ArchConfig, cell_name: str) -> dict:
+    """Full abstract inputs for the cell's entry point."""
+    cell = SHAPES[cell_name]
+    specs = {"batch": batch_specs(cfg, cell)}
+    if cell.kind in ("prefill", "decode"):
+        specs["caches"] = cache_specs(cfg, cell)
+    return specs

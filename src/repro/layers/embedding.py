@@ -1,0 +1,57 @@
+"""Token embedding and the output (unembedding) projection.
+
+The unembedding is the flagship FAµST target (DESIGN.md §5): the largest
+single dense matrix in most assigned archs (gemma3: 262144×5376 ≈ 1.4 B
+params). ``unembed_apply`` dispatches between the dense kernel and a
+FaustLinear chain based on config.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.layers.faust_linear import FaustSpec, faust_linear_apply, faust_linear_init
+from repro.layers.param import annotate, dense_init
+
+Array = jax.Array
+
+
+def embedding_init(key: jax.Array, vocab: int, d_model: int, dtype=jnp.float32) -> dict:
+    w = jax.random.normal(key, (vocab, d_model), dtype=dtype) * 1.0
+    return {"table": annotate(w, "vocab", "embed")}
+
+
+def embed(p: dict, tokens: Array, scale_by_sqrt_dim: bool = False) -> Array:
+    x = p["table"][tokens]
+    if scale_by_sqrt_dim:
+        x = x * np.sqrt(p["table"].shape[-1])
+    return x
+
+
+def unembed_init(
+    key: jax.Array,
+    d_model: int,
+    vocab: int,
+    faust: FaustSpec | None,
+    dtype=jnp.float32,
+) -> dict:
+    if faust is None:
+        return {"w": dense_init(key, d_model, vocab, ("embed", "vocab"), dtype=dtype)}
+    return {"faust": faust_linear_init(key, d_model, vocab, faust, dtype=dtype)}
+
+
+def unembed_apply(
+    p: dict,
+    x: Array,
+    d_model: int,
+    vocab: int,
+    faust: FaustSpec | None,
+    tied_table: Array | None = None,
+) -> Array:
+    """Logits (..., vocab). ``tied_table`` overrides with tied embeddings."""
+    if tied_table is not None:
+        return x @ tied_table.T
+    if faust is None:
+        return x @ p["w"]
+    return faust_linear_apply(p["faust"], x, faust, d_model, vocab)

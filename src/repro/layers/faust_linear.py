@@ -1,0 +1,145 @@
+"""FaustLinear — the paper's technique as a first-class linear layer.
+
+A drop-in replacement for a dense kernel ``W (in, out)``: the weight is a
+FAµST chain of J block-sparse factors (``repro.core.compress.BlockFaust``).
+Two ways to obtain it:
+
+* **train from scratch** (paper's *prescribed support* constraint set,
+  Prop. A.1 with fixed support): random block supports chosen at init,
+  values learned by SGD — ``faust_linear_init``;
+* **compress a trained dense weight** with hierarchical palm4MSA —
+  ``from_dense`` (used by ``examples/compress_operator.py`` and the
+  checkpoint-surgery path).
+
+Apply cost is O(s_tot·tokens) instead of O(in·out·tokens): RCG transfers
+to the compute *and* memory roofline terms (§Perf).
+
+Params are pure arrays ({"factors": [{"values", "in_idx"}...], "lam"});
+the static layout (chain dims, block size) travels in :class:`FaustSpec`,
+which the model owns.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compress import BlockFaust, BlockSparseFactor, random_block_factor
+from repro.kernels.ops import blockfaust_apply
+from repro.layers.param import annotate
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class FaustSpec:
+    """Static config for a FAµST-parameterized projection.
+
+    ``n_factors`` chain length J; ``block`` square block side (128 on TPU);
+    ``k`` kept blocks per output block-column per factor.
+    """
+
+    n_factors: int = 2
+    block: int = 128
+    k: int = 4
+
+    def chain_dims(self, in_dim: int, out_dim: int) -> list[int]:
+        inner = min(in_dim, out_dim)
+        inner = -(-inner // self.block) * self.block  # round up to block
+        return [in_dim] + [inner] * (self.n_factors - 1) + [out_dim]
+
+    def s_tot(self, in_dim: int, out_dim: int) -> int:
+        dims = self.chain_dims(in_dim, out_dim)
+        tot = 0
+        for i in range(self.n_factors):
+            ob = -(-dims[i + 1] // self.block)
+            k = min(self.k, -(-dims[i] // self.block))
+            tot += ob * k * self.block * self.block
+        return tot
+
+    def rcg(self, in_dim: int, out_dim: int) -> float:
+        return in_dim * out_dim / self.s_tot(in_dim, out_dim)
+
+
+def faust_linear_init(
+    key: jax.Array,
+    in_dim: int,
+    out_dim: int,
+    spec: FaustSpec,
+    dtype=jnp.float32,
+) -> dict:
+    """Prescribed-support init (paper Prop. A.1, fixed support): random
+    distinct block supports, variance-scaled values."""
+    dims = spec.chain_dims(in_dim, out_dim)
+    keys = jax.random.split(key, spec.n_factors)
+    factors = []
+    for i in range(spec.n_factors):
+        f = random_block_factor(
+            keys[i], dims[i], dims[i + 1], spec.block, spec.block, spec.k,
+            dtype=dtype,
+        )
+        factors.append(
+            {
+                "values": annotate(f.values, "blocks", "block_k", None, None),
+                "in_idx": annotate(f.in_idx, "blocks", "block_k"),
+            }
+        )
+    return {"factors": factors, "lam": annotate(jnp.ones((), dtype=dtype))}
+
+
+def params_to_blockfaust(
+    p: dict, spec: FaustSpec, in_dim: int, out_dim: int
+) -> BlockFaust:
+    dims = spec.chain_dims(in_dim, out_dim)
+    factors = tuple(
+        BlockSparseFactor(f["values"], f["in_idx"], dims[i], dims[i + 1])
+        for i, f in enumerate(p["factors"])
+    )
+    return BlockFaust(factors, p["lam"])
+
+
+def faust_linear_apply(
+    p: dict,
+    x: Array,
+    spec: FaustSpec,
+    in_dim: int,
+    out_dim: int,
+    *,
+    use_kernel: bool = False,
+) -> Array:
+    return blockfaust_apply(
+        x, params_to_blockfaust(p, spec, in_dim, out_dim), use_kernel=use_kernel
+    )
+
+
+def from_dense(
+    w: Array,
+    spec: FaustSpec,
+    n_iter_two: int = 40,
+    n_iter_global: int = 40,
+) -> dict:
+    """Compress a trained dense kernel into FaustLinear params (the paper's
+    hierarchical factorization with block constraints). The resulting packed
+    ``k`` may differ from ``spec.k``; callers should rebuild the spec from
+    the returned factors if needed."""
+    from repro.core.compress import compress_matrix
+
+    bf, _ = compress_matrix(
+        w,
+        n_factors=spec.n_factors,
+        bk=spec.block,
+        bn=spec.block,
+        k_first=spec.k,
+        k_mid=spec.k,
+        n_iter_two=n_iter_two,
+        n_iter_global=n_iter_global,
+    )
+    factors = [
+        {
+            "values": annotate(f.values, "blocks", "block_k", None, None),
+            "in_idx": annotate(f.in_idx, "blocks", "block_k"),
+        }
+        for f in bf.factors
+    ]
+    return {"factors": factors, "lam": annotate(bf.lam)}

@@ -1,0 +1,84 @@
+"""Feed-forward blocks: GLU variants (GeGLU/SwiGLU), plain GELU, and
+nemotron's squared-ReLU.
+
+Each projection can be FAµST-parameterized (``faust`` spec): the paper's
+technique applied to the dominant dense matmuls — trained from scratch with
+prescribed block supports (Prop. A.1 fixed-support constraint set). The
+compute/memory roofline terms of the FFN then scale by 1/RCG (§Perf
+hillclimb 3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.faust_linear import (
+    FaustSpec,
+    faust_linear_apply,
+    faust_linear_init,
+)
+from repro.layers.param import Annotated, dense_init
+
+Array = jax.Array
+
+GLU_KINDS = ("geglu", "swiglu")
+
+
+def _act(kind: str, x: Array) -> Array:
+    if kind in ("geglu", "gelu"):
+        return jax.nn.gelu(x, approximate=True)
+    if kind == "swiglu":
+        return jax.nn.silu(x)
+    if kind == "sq_relu":
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(kind)
+
+
+def mlp_init(
+    key: jax.Array,
+    d_model: int,
+    d_ff: int,
+    act: str,
+    dtype=jnp.float32,
+    faust: FaustSpec | None = None,
+) -> dict:
+    ks = jax.random.split(key, 3)
+    if faust is not None:
+        p = {
+            "w_up": faust_linear_init(ks[0], d_model, d_ff, faust, dtype),
+            "w_down": faust_linear_init(ks[1], d_ff, d_model, faust, dtype),
+        }
+        if act in GLU_KINDS:
+            p["w_gate"] = faust_linear_init(ks[2], d_model, d_ff, faust, dtype)
+        return p
+    p = {
+        "w_up": dense_init(ks[0], d_model, d_ff, ("embed", "mlp"), dtype=dtype),
+        "w_down": dense_init(ks[1], d_ff, d_model, ("mlp", "embed"), dtype=dtype),
+    }
+    if act in GLU_KINDS:
+        p["w_gate"] = dense_init(ks[2], d_model, d_ff, ("embed", "mlp"), dtype=dtype)
+    return p
+
+
+def mlp_apply(
+    p: dict,
+    x: Array,
+    act: str,
+    faust: FaustSpec | None = None,
+    d_model: int | None = None,
+    d_ff: int | None = None,
+) -> Array:
+    if faust is not None:
+        up = faust_linear_apply(p["w_up"], x, faust, d_model, d_ff)
+        if act in GLU_KINDS:
+            h = _act(act, faust_linear_apply(p["w_gate"], x, faust, d_model, d_ff)) * up
+        else:
+            h = _act(act, up)
+        return faust_linear_apply(p["w_down"], h, faust, d_ff, d_model)
+    up = x @ p["w_up"]
+    if act in GLU_KINDS:
+        h = _act(act, x @ p["w_gate"]) * up
+    else:
+        h = _act(act, up)
+    return h @ p["w_down"]

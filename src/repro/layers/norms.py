@@ -1,0 +1,59 @@
+"""Normalization layers: RMSNorm (llama/gemma family), LayerNorm, and
+nemotron's zero-centered-gamma LayerNorm ("layernorm1p")."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.param import Annotated, annotate
+
+Array = jax.Array
+
+
+def rmsnorm_init(dim: int, dtype=jnp.float32) -> Annotated:
+    return annotate(jnp.zeros((dim,), dtype=dtype), "embed")  # gemma-style 1+w
+
+
+def rmsnorm(w: Array, x: Array, eps: float = 1e-6) -> Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + w.astype(jnp.float32))).astype(dtype)
+
+
+def layernorm_init(dim: int, dtype=jnp.float32) -> dict:
+    return {
+        "scale": annotate(jnp.zeros((dim,), dtype=dtype), "embed"),
+        "bias": annotate(jnp.zeros((dim,), dtype=dtype), "embed"),
+    }
+
+
+def layernorm(p: dict, x: Array, eps: float = 1e-5, zero_centered: bool = True) -> Array:
+    """LayerNorm; ``zero_centered`` stores gamma−1 (nemotron layernorm1p)."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    g = p["scale"].astype(jnp.float32)
+    g = 1.0 + g if zero_centered else g
+    return (y * g + p["bias"].astype(jnp.float32)).astype(dtype)
+
+
+def norm_init(kind: str, dim: int, dtype=jnp.float32):
+    if kind == "rms":
+        return rmsnorm_init(dim, dtype)
+    if kind in ("ln", "ln1p"):
+        return layernorm_init(dim, dtype)
+    raise ValueError(kind)
+
+
+def apply_norm(kind: str, p, x: Array) -> Array:
+    if kind == "rms":
+        return rmsnorm(p, x)
+    if kind == "ln":
+        return layernorm(p, x, zero_centered=True)
+    if kind == "ln1p":
+        return layernorm(p, x, zero_centered=True)
+    raise ValueError(kind)

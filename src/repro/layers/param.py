@@ -1,0 +1,104 @@
+"""Minimal functional parameter system (no flax dependency).
+
+Layers are (init, apply) function pairs over plain dict pytrees. During
+init, every array is wrapped in :class:`Annotated` carrying its *logical
+axis names*; :func:`split_annotations` separates the value tree from the
+axes tree, and :mod:`repro.distributed.sharding` maps logical axes →
+PartitionSpecs per architecture policy.
+
+Logical axes used across the framework:
+  "embed"   — model width d_model (and SSM d_inner)
+  "vocab"   — vocabulary / codebook
+  "heads"   — attention / SSD query heads (flattened head·head_dim dims use
+              "heads_flat")
+  "kv"      — KV heads (flattened: "kv_flat")
+  "mlp"     — FFN hidden
+  "experts" — MoE expert dim
+  "layers"  — scanned layer stack dim
+  "blocks", "block_k" — FAµST packed factor dims
+  None      — replicated
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Annotated:
+    """An initialized parameter + its logical sharding axes.
+
+    Registered as a pytree node (value = child, axes = aux) so annotated
+    init functions compose with ``jax.eval_shape`` / ``vmap`` — abstract
+    init preserves the logical axes in the treedef.
+    """
+
+    value: Any  # Array, or nested structure for packed params
+    axes: tuple[str | None, ...]
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux)
+
+
+def annotate(value: Array, *axes: str | None) -> Annotated:
+    assert np.ndim(value) == len(axes), (jnp.shape(value), axes)
+    return Annotated(value, tuple(axes))
+
+
+def split_annotations(tree) -> tuple[Any, Any]:
+    """(Annotated-tree) → (value-tree, axes-tree) with identical structure."""
+    is_leaf = lambda x: isinstance(x, Annotated)
+    values = jax.tree_util.tree_map(
+        lambda a: a.value if isinstance(a, Annotated) else a, tree, is_leaf=is_leaf
+    )
+    axes = jax.tree_util.tree_map(
+        lambda a: a.axes if isinstance(a, Annotated) else None, tree, is_leaf=is_leaf
+    )
+    return values, axes
+
+
+def dense_init(
+    key: jax.Array,
+    in_dim: int,
+    out_dim: int,
+    axes: tuple[str | None, str | None],
+    scale: float = 1.0,
+    dtype=jnp.float32,
+) -> Annotated:
+    """LeCun-normal dense kernel (in, out).
+
+    NOTE: the std multiplier must be a *weak-typed* Python float — a numpy
+    scalar would promote bf16 kernels to f32.
+    """
+    std = float(scale / np.sqrt(in_dim))
+    w = jax.random.normal(key, (in_dim, out_dim), dtype=dtype) * std
+    return annotate(w.astype(dtype), *axes)
+
+
+def stack_annotated(trees: list):
+    """Stack per-layer Annotated trees into one tree with a leading
+    "layers" axis (used for lax.scan over layer stacks)."""
+    return jax.tree_util.tree_map(
+        lambda *anns: Annotated(
+            jnp.stack([a.value for a in anns]), ("layers",) + anns[0].axes
+        ),
+        *trees,
+        is_leaf=lambda x: isinstance(x, Annotated),
+    )
+
+
+def count_params(params) -> int:
+    return int(
+        sum(np.prod(p.shape) for p in jax.tree_util.tree_leaves(params))
+    )

@@ -1,0 +1,49 @@
+"""Rotary position embeddings — the variants used by the assigned archs.
+
+* full rotary (llama-family, gemma; gemma3 uses a different base for local
+  vs global layers);
+* partial rotary over the first ``rotary_dim`` channels (chatglm3's "2d
+  RoPE" applies rotary to half the head dim; nemotron uses rotary_pct=0.5);
+* none (musicgen uses learned/sinusoidal positions — handled at embedding).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def rope_frequencies(head_dim: int, rotary_dim: int, base: float) -> Array:
+    """Inverse frequencies for the rotated sub-dimension (rotary_dim//2,)."""
+    exponent = jnp.arange(0, rotary_dim, 2, dtype=jnp.float32) / rotary_dim
+    return 1.0 / (base**exponent)
+
+
+def apply_rope(
+    x: Array,
+    positions: Array,
+    *,
+    rotary_dim: int | None = None,
+    base: float = 10000.0,
+) -> Array:
+    """Rotate ``x`` (..., seq, heads, head_dim) by ``positions`` (..., seq).
+
+    Non-interleaved (half-split) convention, fp32 rotation math.
+    """
+    head_dim = x.shape[-1]
+    rotary_dim = head_dim if rotary_dim is None else rotary_dim
+    assert rotary_dim % 2 == 0 and rotary_dim <= head_dim
+    inv_freq = rope_frequencies(head_dim, rotary_dim, base)
+    angles = positions.astype(jnp.float32)[..., None] * inv_freq  # (..., S, rd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, rd/2)
+    sin = jnp.sin(angles)[..., None, :]
+
+    xr = x[..., :rotary_dim].astype(jnp.float32)
+    x1, x2 = jnp.split(xr, 2, axis=-1)
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    rotated = jnp.concatenate([r1, r2], axis=-1).astype(x.dtype)
+    if rotary_dim == head_dim:
+        return rotated
+    return jnp.concatenate([rotated, x[..., rotary_dim:]], axis=-1)

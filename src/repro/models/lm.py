@@ -1,0 +1,392 @@
+"""Unified decoder LM covering all 10 assigned architectures.
+
+The per-layer structure is described by ``cfg.stages`` — (repeat, unit)
+pairs where a *unit* is a tuple of layer kinds executed inside one
+``lax.scan`` step (so gemma3's 5:1 local:global pattern and zamba2's
+mamba+shared-block pattern scan over their periodic repeat units, keeping
+the HLO small at 62–81 layers).
+
+Layer kinds: "attn" (global attention + FFN), "local" (sliding window +
+FFN), "moe" (attention + MoE), "ssm" (mamba2), "shared" (zamba2's shared
+transformer block — parameters live outside the scan and are reused; each
+occurrence still owns its KV cache).
+
+Entry points:
+  init_model / param_axes      — parameters (+ logical sharding axes)
+  train_loss                   — next-token CE (+ MoE aux), fp32 logits
+  prefill / decode_step        — serving path with per-layer caches
+  make_caches                  — cache pytree (abstract-init friendly)
+
+Modality frontends (per spec, stubs): "vlm" consumes precomputed patch
+embeddings replacing the first ``n_vision_tokens`` positions; "audio"
+consumes ``n_codebooks`` parallel token streams (summed embeddings,
+parallel unembed heads).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard_act
+from repro.layers import attention as A
+from repro.layers import mamba2 as M
+from repro.layers import moe as MOE
+from repro.layers.embedding import embedding_init, unembed_apply, unembed_init
+from repro.layers.mlp import mlp_apply, mlp_init
+from repro.layers.norms import apply_norm, norm_init
+from repro.layers.param import Annotated, annotate, split_annotations, stack_annotated
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Specs derived from config
+# ---------------------------------------------------------------------------
+
+
+def attn_spec(cfg: ArchConfig, kind: str) -> A.AttnSpec:
+    local = kind == "local"
+    rotary_dim = int(cfg.head_dim * cfg.rotary_pct)
+    if rotary_dim % 2:
+        rotary_dim -= 1
+    return A.AttnSpec(
+        n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.head_dim,
+        rope_base=(cfg.rope_base_local or cfg.rope_base) if local else cfg.rope_base,
+        rotary_dim=rotary_dim if cfg.rotary_pct < 1.0 else None,
+        window=cfg.window if local else None,
+        qk_norm=cfg.qk_norm,
+        scale=cfg.attn_scale,
+        use_rope=cfg.rotary_pct > 0.0,
+    )
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(key: jax.Array, cfg: ArchConfig, kind: str) -> dict:
+    dt = _dtype(cfg)
+    d = cfg.d_model
+    if kind == "ssm":
+        k1, k2 = jax.random.split(key)
+        return {
+            "norm": norm_init(cfg.norm, d, dt),
+            "mamba": M.mamba2_init(k1, cfg.ssm, dt),
+        }
+    if kind == "shared":
+        return {}  # params live outside the scan
+    ks = jax.random.split(key, 4)
+    p = {
+        "norm1": norm_init(cfg.norm, d, dt),
+        "attn": A.attn_init(
+            ks[0], d, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.qk_norm, dt
+        ),
+        "norm2": norm_init(cfg.norm, d, dt),
+    }
+    if kind == "moe":
+        p["moe"] = MOE.moe_init(ks[1], d, cfg.moe, dt)
+    else:
+        p["mlp"] = mlp_init(ks[1], d, cfg.d_ff, cfg.act, dt, faust=cfg.faust_mlp)
+    return p
+
+
+def _init_annotated(key: jax.Array, cfg: ArchConfig):
+    dt = _dtype(cfg)
+    keys = jax.random.split(key, 8)
+    p: dict[str, Any] = {}
+    if cfg.n_codebooks > 1:
+        tabs = [
+            embedding_init(k, cfg.vocab, cfg.d_model, dt)
+            for k in jax.random.split(keys[0], cfg.n_codebooks)
+        ]
+        p["embed"] = stack_annotated(tabs)
+    else:
+        p["embed"] = embedding_init(keys[0], cfg.vocab, cfg.d_model, dt)
+
+    stages = []
+    lkeys = jax.random.split(keys[1], len(cfg.stages))
+    for (repeat, unit), skey in zip(cfg.stages, lkeys):
+        ukeys = jax.random.split(skey, len(unit))
+        stage = []
+        for pos, kind in enumerate(unit):
+            per_layer = [
+                _layer_init(k, cfg, kind)
+                for k in jax.random.split(ukeys[pos], repeat)
+            ]
+            stage.append(stack_annotated(per_layer))
+        stages.append(stage)
+    p["stages"] = stages
+
+    if any(k == "shared" for k in cfg.layer_kinds()):
+        p["shared"] = _layer_init(keys[2], cfg, "attn")
+
+    p["final_norm"] = norm_init(cfg.norm, cfg.d_model, dt)
+    if not cfg.tie_embeddings:
+        if cfg.n_codebooks > 1:
+            heads = [
+                unembed_init(k, cfg.d_model, cfg.vocab, cfg.faust_unembed, dt)
+                for k in jax.random.split(keys[3], cfg.n_codebooks)
+            ]
+            p["unembed"] = stack_annotated(heads)
+        else:
+            p["unembed"] = unembed_init(
+                keys[3], cfg.d_model, cfg.vocab, cfg.faust_unembed, dt
+            )
+    return p
+
+
+def init_model(key: jax.Array, cfg: ArchConfig):
+    params, _ = split_annotations(_init_annotated(key, cfg))
+    return params
+
+
+def param_axes(cfg: ArchConfig):
+    ann = jax.eval_shape(functools.partial(_init_annotated, cfg=cfg), jax.random.PRNGKey(0))
+    _, axes = split_annotations(ann)
+    return axes
+
+
+def abstract_params(cfg: ArchConfig):
+    ann = jax.eval_shape(functools.partial(_init_annotated, cfg=cfg), jax.random.PRNGKey(0))
+    params, _ = split_annotations(ann)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+
+def _layer_cache(cfg: ArchConfig, kind: str, batch: int, cache_len: int, dtype):
+    if kind == "ssm":
+        return M.mamba_cache_init(batch, cfg.ssm, dtype)
+    cap = cache_len
+    if kind == "local" and cfg.window is not None:
+        cap = min(cfg.window, cache_len)
+    return A.kv_cache_init(batch, cap, cfg.n_kv_heads, cfg.head_dim, dtype)
+
+
+def make_caches(cfg: ArchConfig, batch: int, cache_len: int, dtype=jnp.bfloat16):
+    stages = []
+    for repeat, unit in cfg.stages:
+        stage = []
+        for kind in unit:
+            per = [_layer_cache(cfg, kind, batch, cache_len, dtype) for _ in range(repeat)]
+            stage.append(jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per))
+        stages.append(stage)
+    return stages
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+class _Mode:
+    TRAIN = "train"
+    PREFILL = "prefill"
+    DECODE = "decode"
+
+
+def _apply_layer(
+    cfg: ArchConfig,
+    kind: str,
+    lp: dict,
+    shared_params: dict | None,
+    x: Array,
+    aux: Array,
+    mode: str,
+    cache,
+):
+    chunk = cfg.attn_chunk
+    if kind == "ssm":
+        h = apply_norm(cfg.norm, lp["norm"], x)
+        if mode == _Mode.TRAIN:
+            y, new_cache = M.mamba2_apply(lp["mamba"], h, cfg.ssm, None, False)
+        elif mode == _Mode.PREFILL:
+            y, new_cache = M.mamba2_apply(lp["mamba"], h, cfg.ssm, cache, False)
+        else:
+            y, new_cache = M.mamba2_apply(lp["mamba"], h, cfg.ssm, cache, True)
+        return x + y.astype(x.dtype), aux, new_cache
+
+    if kind == "shared":
+        lp = shared_params
+    spec = attn_spec(cfg, kind)
+    h = apply_norm(cfg.norm, lp["norm1"], x)
+    h = shard_act(h, "batch", "seq", None)
+    if mode == _Mode.TRAIN:
+        y = A.attn_train(lp["attn"], h, spec, chunk)
+        new_cache = cache
+    elif mode == _Mode.PREFILL:
+        y, new_cache = A.attn_prefill(lp["attn"], h, spec, cache, chunk)
+    else:
+        y, new_cache = A.attn_decode(lp["attn"], h, spec, cache)
+    x = x + shard_act(y.astype(x.dtype), "batch", "seq", None)
+
+    h = apply_norm(cfg.norm, lp["norm2"], x)
+    if kind == "moe":
+        # §Perf iteration 4: optionally gather the sequence dim at the MoE
+        # boundary — routing sorts and the (B,E,C,·) expert einsums otherwise
+        # conflict with context-parallel seq sharding and XLA partial-sum
+        # all-reduces expert-activation-sized tensors per layer. Helps ff-TP
+        # experts (granite); hurts EP experts (llama4) — policy-selected.
+        if cfg.policy.moe_gather_seq:
+            h = shard_act(h, "batch", None, None)
+        y, layer_aux = MOE.moe_apply(lp["moe"], h, cfg.moe)
+        aux = aux + layer_aux
+    else:
+        y = mlp_apply(
+            lp["mlp"], h, cfg.act,
+            faust=cfg.faust_mlp, d_model=cfg.d_model, d_ff=cfg.d_ff,
+        )
+    x = x + shard_act(y.astype(x.dtype), "batch", "seq", None)
+    return x, aux, new_cache
+
+
+def _run_stages(params, cfg: ArchConfig, x: Array, mode: str, caches):
+    """Scan every stage; returns (x, aux, new_caches)."""
+    aux = jnp.zeros((), jnp.float32)
+    shared = params.get("shared")
+    new_caches = []
+    for si, (repeat, unit) in enumerate(cfg.stages):
+        stage_params = params["stages"][si]
+        stage_caches = caches[si] if caches is not None else [None] * len(unit)
+
+        def unit_body(carry, xs):
+            x, aux = carry
+            lps, lcs = xs
+            ncs = []
+            for pos, kind in enumerate(unit):
+                x, aux, nc = _apply_layer(
+                    cfg, kind, lps[pos], shared, x, aux, mode, lcs[pos]
+                )
+                ncs.append(nc)
+            return (x, aux), ncs
+
+        body = unit_body
+        if cfg.remat and mode == _Mode.TRAIN:
+            body = jax.checkpoint(unit_body, prevent_cse=False)
+
+        xs = (stage_params, stage_caches)
+        (x, aux), ncs = jax.lax.scan(body, (x, aux), xs)
+        new_caches.append(ncs)
+    return x, aux, new_caches
+
+
+def _embed_tokens(params, cfg: ArchConfig, tokens: Array, pos0) -> Array:
+    dt = _dtype(cfg)
+    if cfg.n_codebooks > 1:
+        # tokens (B, K, S): sum codebook embeddings x[b,s] = Σ_k T[k, tok[b,k,s]]
+        tabs = params["embed"]["table"]  # (K, V, d)
+        kidx = jnp.arange(cfg.n_codebooks)[None, :, None]
+        x = jnp.sum(tabs[kidx, tokens], axis=1).astype(dt)  # (B,S,d)
+        # sinusoidal positions (musicgen has no rope)
+        s = tokens.shape[-1]
+        pos = pos0 + jnp.arange(s)
+        half = cfg.d_model // 2
+        freq = jnp.exp(-np.log(10000.0) * jnp.arange(half) / half)
+        ang = pos[:, None] * freq[None, :]
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+        x = x + pe[None].astype(dt)
+        return x
+    x = params["embed"]["table"][tokens].astype(dt)
+    if cfg.scale_embed:
+        x = x * float(np.sqrt(cfg.d_model))  # weak-typed: stays in dt
+    return x
+
+
+def _logits(params, cfg: ArchConfig, x: Array) -> Array:
+    tied = params["embed"]["table"] if cfg.tie_embeddings else None
+    if cfg.n_codebooks > 1:
+        outs = []
+        for k in range(cfg.n_codebooks):
+            head = jax.tree_util.tree_map(lambda t: t[k], params["unembed"])
+            outs.append(
+                unembed_apply(head, x, cfg.d_model, cfg.vocab, cfg.faust_unembed)
+            )
+        return jnp.stack(outs, axis=-2).astype(jnp.float32)  # (B,S,K,V)
+    logits = unembed_apply(
+        params["unembed"] if not cfg.tie_embeddings else None,
+        x,
+        cfg.d_model,
+        cfg.vocab,
+        cfg.faust_unembed,
+        tied_table=tied,
+    )
+    return logits.astype(jnp.float32)
+
+
+def forward_train(params, cfg: ArchConfig, batch: dict) -> tuple[Array, Array]:
+    tokens = batch["tokens"]
+    x = _embed_tokens(params, cfg, tokens, 0)
+    if cfg.n_vision_tokens:
+        nv = cfg.n_vision_tokens
+        ve = batch["vision_embeds"].astype(x.dtype)
+        x = jnp.concatenate([ve, x[:, nv:]], axis=1)
+    x = shard_act(x, "batch", "seq", None)
+    x, aux, _ = _run_stages(params, cfg, x, _Mode.TRAIN, None)
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    return _logits(params, cfg, x), aux
+
+
+def train_loss(params, cfg: ArchConfig, batch: dict) -> tuple[Array, dict]:
+    logits, aux = forward_train(params, cfg, batch)
+    tokens = batch["tokens"]
+    if cfg.n_codebooks > 1:
+        labels = tokens[:, :, 1:]  # (B,K,S-1)
+        lg = logits[:, :-1].transpose(0, 2, 1, 3)  # (B,K,S-1,V)
+    else:
+        labels = tokens[:, 1:]
+        lg = logits[:, :-1]
+    lg = shard_act(lg, *(("batch",) + (None,) * (lg.ndim - 2) + ("vocab_act",)))
+    lse = jax.scipy.special.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    ce = jnp.mean(lse - gold)
+    loss = ce + aux
+    return loss, {"loss": loss, "ce": ce, "aux": aux}
+
+
+def prefill(params, cfg: ArchConfig, batch: dict, caches):
+    tokens = batch["tokens"]
+    x = _embed_tokens(params, cfg, tokens, 0)
+    if cfg.n_vision_tokens:
+        nv = cfg.n_vision_tokens
+        ve = batch["vision_embeds"].astype(x.dtype)
+        x = jnp.concatenate([ve, x[:, nv:]], axis=1)
+    x = shard_act(x, "batch", "seq", None)
+    x, _, new_caches = _run_stages(params, cfg, x, _Mode.PREFILL, caches)
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    logits = _logits(params, cfg, x[:, -1:])
+    return logits, new_caches
+
+
+def decode_step(params, cfg: ArchConfig, tokens: Array, caches):
+    """tokens: (B,1) (or (B,K,1) audio). Returns (logits, new_caches)."""
+    pos0 = _first_cache_pos(caches)
+    x = _embed_tokens(params, cfg, tokens, pos0)
+    x = shard_act(x, "batch", None, None)
+    x, _, new_caches = _run_stages(params, cfg, x, _Mode.DECODE, caches)
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    return _logits(params, cfg, x), new_caches
+
+
+def _first_cache_pos(caches) -> Array:
+    first = caches[0][0]
+    return first.pos[0]  # stacked over repeat
+
+
+def greedy_token(logits: Array) -> Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)

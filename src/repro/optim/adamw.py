@@ -1,0 +1,130 @@
+"""AdamW with decoupled weight decay, global-norm clipping, LR schedules.
+
+Optimizer state pytrees mirror the parameter tree, so the parameter
+PartitionSpecs apply verbatim to ``mu``/``nu`` (ZeRO-style: the 2-D weight
+sharding from DESIGN.md §6 keeps optimizer memory at params×3/shards).
+
+Integer leaves (FAµST block indices) are held constant: their "gradients"
+are zero/float0 and the update is skipped structurally.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+class AdamWState(NamedTuple):
+    mu: dict
+    nu: dict
+    step: Array
+
+
+def _is_float(p) -> bool:
+    dt = getattr(p, "dtype", None)
+    if dt is None or dt == jax.dtypes.float0:
+        return False
+    return jnp.issubdtype(dt, jnp.floating)
+
+
+def init_state(params) -> AdamWState:
+    # f32 moments regardless of param dtype (bf16 params + f32 optimizer)
+    def z(p):
+        return (
+            jnp.zeros(p.shape, jnp.float32)
+            if _is_float(p)
+            else jnp.zeros((), jnp.float32)
+        )
+
+    return AdamWState(
+        jax.tree_util.tree_map(z, params),
+        jax.tree_util.tree_map(z, params),
+        jnp.zeros((), jnp.int32),
+    )
+
+
+def schedule(cfg: AdamWConfig, step: Array) -> Array:
+    """Linear warmup → cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(np.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree) -> Array:
+    leaves = [
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree_util.tree_leaves(tree)
+        if _is_float(g)
+    ]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return (
+        jax.tree_util.tree_map(
+            lambda g: g * scale.astype(g.dtype) if _is_float(g) else g, grads
+        ),
+        norm,
+    )
+
+
+def apply_updates(cfg: AdamWConfig, params, grads, state: AdamWState):
+    """Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        if not _is_float(p):
+            return p, mu, nu
+        g32 = g.astype(jnp.float32)
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g32
+        nu = cfg.b2 * nu + (1 - cfg.b2) * g32 * g32
+        mhat = mu / b1c
+        nhat = nu / b2c
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32
+        )
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state.mu)
+    flat_nu = treedef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    return (
+        new_p,
+        AdamWState(new_mu, new_nu, step),
+        {"grad_norm": gnorm, "lr": lr},
+    )

@@ -1,0 +1,159 @@
+"""Gradient compression for cross-pod synchronization.
+
+Two classical schemes, both with error feedback (EF):
+
+* **EF top-k sparsification** (Stich et al.) — keep the k largest-magnitude
+  entries of each gradient leaf; the residual is fed back next step. This
+  is the paper's own primitive (Prop. A.1 projection) applied to gradients:
+  sparse approximation with a memory term.
+* **PowerSGD** (Vogels et al.) — rank-r factorization G ≈ P Qᵀ with a warm
+  -started Q and one-step power iteration; EF on the residual.
+
+Semantics note: under pjit, gradients are reduced by XLA inside the step;
+these transforms model *what would be communicated* — compress(g) is used
+for the update and the residual is carried in optimizer-side state. On a
+real multi-pod deployment the compressed factors are what crosses the
+inter-pod links (the collective-bytes reduction is what §Perf's
+collective-bound hillclimb measures); the math here is bit-identical.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def _is_float(p) -> bool:
+    dt = getattr(p, "dtype", None)
+    if dt is None or dt == jax.dtypes.float0:
+        return False
+    return jnp.issubdtype(dt, jnp.floating)
+
+
+# ---------------------------------------------------------------------------
+# EF top-k
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKConfig:
+    ratio: float = 0.01  # fraction of entries kept per leaf
+
+
+class EFState(NamedTuple):
+    residual: dict
+
+
+def ef_topk_init(params) -> EFState:
+    return EFState(
+        jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+            if _is_float(p)
+            else jnp.zeros((), jnp.float32),
+            params,
+        )
+    )
+
+
+def ef_topk_compress(cfg: TopKConfig, grads, state: EFState):
+    """Returns (compressed_grads, new_state, metrics)."""
+
+    def one(g, r):
+        if not _is_float(g):
+            return g, r
+        acc = g.astype(jnp.float32) + r
+        flat = acc.reshape(-1)
+        k = max(int(np.ceil(flat.size * cfg.ratio)), 1)
+        _, idx = jax.lax.top_k(jnp.abs(flat), k)
+        mask = jnp.zeros_like(flat).at[idx].set(1.0)
+        kept = flat * mask
+        return kept.reshape(g.shape).astype(g.dtype), (flat - kept).reshape(g.shape)
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = treedef.flatten_up_to(state.residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    comp = treedef.unflatten([o[0] for o in out])
+    resid = treedef.unflatten([o[1] for o in out])
+    err = global_residual_norm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(o[1])) for o in out if _is_float(o[1]))
+    )
+    return comp, EFState(resid), {"ef_residual_norm": err}
+
+
+# ---------------------------------------------------------------------------
+# PowerSGD
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PowerSGDConfig:
+    rank: int = 4
+    min_dim: int = 128  # leaves smaller than this stay uncompressed
+
+
+class PowerSGDState(NamedTuple):
+    q: dict  # warm-started right factors (or () for uncompressed leaves)
+    residual: dict
+
+
+def _as_matrix(g: Array) -> Array:
+    return g.reshape(g.shape[0], -1) if g.ndim > 1 else g.reshape(1, -1)
+
+
+def powersgd_init(key: jax.Array, params, cfg: PowerSGDConfig) -> PowerSGDState:
+    def one(k, p):
+        if not _is_float(p) or np.prod(p.shape) < cfg.min_dim**2 or p.ndim < 2:
+            return jnp.zeros((), jnp.float32)
+        m = _as_matrix(p)
+        return jax.random.normal(k, (m.shape[1], cfg.rank), jnp.float32)
+
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    keys = jax.random.split(key, len(leaves))
+    q = treedef.unflatten([one(k, p) for k, p in zip(keys, leaves)])
+    residual = jax.tree_util.tree_map(
+        lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        if _is_float(p)
+        else jnp.zeros((), jnp.float32),
+        params,
+    )
+    return PowerSGDState(q, residual)
+
+
+def powersgd_compress(cfg: PowerSGDConfig, grads, state: PowerSGDState):
+    def one(g, q, r):
+        if not _is_float(g) or q.ndim != 2:
+            return g, q, r
+        m = _as_matrix(g.astype(jnp.float32) + r.astype(jnp.float32))
+        p_fac = m @ q  # (rows, rank)
+        p_fac, _ = jnp.linalg.qr(p_fac)
+        q_new = m.T @ p_fac  # (cols, rank)
+        approx = p_fac @ q_new.T
+        resid = (m - approx).reshape(g.shape)
+        return approx.reshape(g.shape).astype(g.dtype), q_new, resid
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_q = treedef.flatten_up_to(state.q)
+    flat_r = treedef.flatten_up_to(state.residual)
+    out = [one(g, q, r) for g, q, r in zip(flat_g, flat_q, flat_r)]
+    comp = treedef.unflatten([o[0] for o in out])
+    new_q = treedef.unflatten([o[1] for o in out])
+    resid = treedef.unflatten([o[2] for o in out])
+    return comp, PowerSGDState(new_q, resid), {}
+
+
+def compression_ratio_topk(params, cfg: TopKConfig) -> float:
+    """Communicated floats / dense floats (indices counted as one float)."""
+    total = sum(
+        int(np.prod(p.shape)) for p in jax.tree_util.tree_leaves(params) if _is_float(p)
+    )
+    kept = sum(
+        2 * max(int(np.ceil(np.prod(p.shape) * cfg.ratio)), 1)
+        for p in jax.tree_util.tree_leaves(params)
+        if _is_float(p)
+    )
+    return kept / total

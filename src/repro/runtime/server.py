@@ -1,0 +1,84 @@
+"""Batched serving runtime: prefill + greedy decode with jitted steps.
+
+Request model: a batch of prompts (equal length after left-padding by the
+caller — the static-shape serving pattern), one prefill pass fills the
+caches, then token-by-token decode. Decode sharding follows
+``cfg.decode_policy()`` (SP decode: cache sequence on 'model').
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.configs.base import ArchConfig
+from repro.distributed import sharding as shd
+from repro.models import lm
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class ServeStats:
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    tokens_decoded: int = 0
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens_decoded / self.decode_s if self.decode_s else 0.0
+
+
+class Server:
+    def __init__(self, cfg: ArchConfig, params, max_len: int, mesh: Mesh | None = None):
+        self.cfg, self.params, self.max_len, self.mesh = cfg, params, max_len, mesh
+
+        def _prefill(params, batch, caches):
+            with shd.use_rules(mesh, cfg.decode_policy()):
+                return lm.prefill(params, cfg, batch, caches)
+
+        def _decode(params, tokens, caches):
+            with shd.use_rules(mesh, cfg.decode_policy()):
+                return lm.decode_step(params, cfg, tokens, caches)
+
+        self.prefill_fn = jax.jit(_prefill, donate_argnums=2)
+        self.decode_fn = jax.jit(_decode, donate_argnums=2)
+
+    def _sample(self, logits: Array) -> Array:
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # greedy
+        if self.cfg.n_codebooks > 1:
+            return tok.reshape(tok.shape[0], self.cfg.n_codebooks, 1)
+        return tok.reshape(-1, 1)
+
+    def generate(self, batch: dict, n_new_tokens: int) -> tuple[np.ndarray, ServeStats]:
+        cfg = self.cfg
+        b = batch["tokens"].shape[0]
+        stats = ServeStats()
+        caches = lm.make_caches(
+            cfg, b, self.max_len,
+            dtype=jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32,
+        )
+        t0 = time.monotonic()
+        logits, caches = self.prefill_fn(self.params, batch, caches)
+        logits.block_until_ready()
+        stats.prefill_s = time.monotonic() - t0
+
+        outs = []
+        tok = self._sample(logits[:, -1] if logits.ndim == 3 else logits[:, -1])
+        outs.append(np.asarray(tok))
+        t0 = time.monotonic()
+        for _ in range(n_new_tokens - 1):
+            logits, caches = self.decode_fn(self.params, tok, caches)
+            tok = self._sample(logits[:, 0] if cfg.n_codebooks == 1 else logits[:, 0])
+            outs.append(np.asarray(tok))
+        jax.block_until_ready(tok)
+        stats.decode_s = time.monotonic() - t0
+        stats.tokens_decoded = b * (n_new_tokens - 1)
+        gen = np.concatenate(outs, axis=-1)
+        return gen, stats

@@ -1,0 +1,136 @@
+"""Attention reference implementations vs a naive dense oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.layers.attention import (
+    AttnSpec,
+    KVCache,
+    attn_decode,
+    attn_init,
+    attn_prefill,
+    attn_train,
+    banded_attention_ref,
+    decode_attention,
+    flash_attention_ref,
+    kv_cache_init,
+    kv_cache_positions,
+    kv_cache_prefill,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def naive_attention(q, k, v, causal=True, window=None):
+    b, sq, h, d = q.shape
+    _, skv, kh, _ = k.shape
+    g = h // kh
+    qg = q.reshape(b, sq, kh, g, d)
+    s = jnp.einsum("bqhgd,bchd->bhgqc", qg, k) * d**-0.5
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(skv)[None, :]
+    ok = jnp.ones((sq, skv), bool)
+    if causal:
+        ok &= kp <= qp
+    if window is not None:
+        ok &= kp > qp - window
+    s = jnp.where(ok, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqc,bchd->bhgqd", p, v)
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d)
+
+
+@pytest.mark.parametrize("h,kh", [(4, 4), (8, 2), (4, 1)])
+@pytest.mark.parametrize("chunk", [4, 8, 32])
+def test_flash_matches_naive(h, kh, chunk):
+    key = jax.random.PRNGKey(0)
+    b, s, d = 2, 32, 16
+    q = jax.random.normal(key, (b, s, h, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, kh, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, kh, d))
+    pos = jnp.arange(s)
+    got = flash_attention_ref(q, k, v, q_positions=pos, kv_positions=pos, chunk=chunk)
+    want = naive_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [4, 8, 20])
+@pytest.mark.parametrize("chunk", [8, 16])
+def test_banded_matches_naive_windowed(window, chunk):
+    key = jax.random.PRNGKey(3)
+    b, s, h, kh, d = 2, 32, 4, 2, 8
+    q = jax.random.normal(key, (b, s, h, d))
+    k = jax.random.normal(jax.random.PRNGKey(4), (b, s, kh, d))
+    v = jax.random.normal(jax.random.PRNGKey(5), (b, s, kh, d))
+    got = banded_attention_ref(q, k, v, window=window, chunk=chunk)
+    want = naive_attention(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-5)
+
+
+def test_flash_windowed_matches_naive():
+    b, s, h, kh, d = 1, 64, 2, 2, 8
+    q = jax.random.normal(jax.random.PRNGKey(6), (b, s, h, d))
+    k = jax.random.normal(jax.random.PRNGKey(7), (b, s, kh, d))
+    v = jax.random.normal(jax.random.PRNGKey(8), (b, s, kh, d))
+    pos = jnp.arange(s)
+    got = flash_attention_ref(
+        q, k, v, q_positions=pos, kv_positions=pos, window=16, chunk=16
+    )
+    want = naive_attention(q, k, v, window=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [None, 8])
+def test_prefill_then_decode_matches_train(window):
+    """Prefill + N decode steps == full-sequence attention on the suffix."""
+    spec = AttnSpec(n_heads=4, n_kv_heads=2, head_dim=8, window=window)
+    d_model = 16
+    p_ann = attn_init(jax.random.PRNGKey(9), d_model, 4, 2, 8)
+    from repro.layers.param import split_annotations
+
+    params, _ = split_annotations(p_ann)
+    b, s_total, s_prefill = 2, 24, 16
+    x = jax.random.normal(jax.random.PRNGKey(10), (b, s_total, d_model))
+
+    # oracle: full self-attention over the whole sequence
+    want = attn_train(params, x, spec, chunk=8)
+
+    cap = window if window is not None else s_total
+    cache = kv_cache_init(b, cap, 2, 8, dtype=jnp.float32)
+    y_pre, cache = attn_prefill(params, x[:, :s_prefill], spec, cache, chunk=8)
+    np.testing.assert_allclose(
+        np.asarray(y_pre), np.asarray(want[:, :s_prefill]), rtol=2e-4, atol=2e-5
+    )
+    ys = []
+    for t in range(s_prefill, s_total):
+        y_t, cache = attn_decode(params, x[:, t : t + 1], spec, cache)
+        ys.append(y_t)
+    got_dec = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(got_dec), np.asarray(want[:, s_prefill:]), rtol=2e-3, atol=2e-4
+    )
+
+
+def test_ring_cache_positions():
+    cache = kv_cache_init(1, 4, 1, 4, dtype=jnp.float32)
+    cache = cache._replace(pos=jnp.asarray(6, jnp.int32))
+    pos = np.asarray(kv_cache_positions(cache))
+    # slots hold tokens 4,5 (new) and 2,3 (old)
+    np.testing.assert_array_equal(pos, [4, 5, 2, 3])
+
+
+def test_gqa_consistency_with_repeated_kv():
+    """GQA == MHA with kv heads repeated."""
+    b, s, kh, g, d = 1, 16, 2, 3, 8
+    h = kh * g
+    q = jax.random.normal(jax.random.PRNGKey(11), (b, s, h, d))
+    k = jax.random.normal(jax.random.PRNGKey(12), (b, s, kh, d))
+    v = jax.random.normal(jax.random.PRNGKey(13), (b, s, kh, d))
+    pos = jnp.arange(s)
+    got = flash_attention_ref(q, k, v, q_positions=pos, kv_positions=pos, chunk=8)
+    k_rep = jnp.repeat(k, g, axis=2)
+    v_rep = jnp.repeat(v, g, axis=2)
+    # repeat-kv ordering: head i uses kv head i // g ⇒ q reshaped (kh, g)
+    want = flash_attention_ref(q, k_rep, v_rep, q_positions=pos, kv_positions=pos, chunk=8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-5)

@@ -1,0 +1,103 @@
+"""HLO cost/collective parsers (launch/hlo_cost.py, launch/roofline.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_cost import hlo_cost
+from repro.launch.roofline import (
+    _type_bytes,
+    collective_stats,
+    match_header,
+    while_trip,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_type_bytes():
+    assert _type_bytes("bf16[4,8]") == 64
+    assert _type_bytes("f32[2,2]{1,0}") == 16
+    assert _type_bytes("(f32[4], s32[2])") == 24
+    assert _type_bytes("pred[]") == 1
+
+
+def test_match_header():
+    assert match_header(
+        "%wide.region_4 (p: (s32[], f32[2,2])) -> (s32[], f32[2,2]) {"
+    ) == "wide.region_4"
+    assert match_header("ENTRY %main.58_spmd (p.1: f32[2]) -> f32[2] {") == "main.58_spmd"
+    assert match_header("  %x = f32[2] add(%a, %b)") is None
+
+
+def test_while_trip_from_backend_config():
+    line = ('%while.1 = (s32[]) while(%t), condition=%c, body=%b, '
+            'backend_config={"known_trip_count":{"n":"18"}}')
+    assert while_trip(line) == 18
+    assert while_trip("%while.2 = (s32[]) while(%t), body=%b") == 1
+
+
+def _compiled_text(fn, *specs):
+    return jax.jit(fn).lower(*specs).compile().as_text()
+
+
+def test_hlo_cost_counts_scan_trips():
+    """flops of scan(matmul × N) ≈ N × flops(matmul)."""
+    d = 64
+    w = jax.ShapeDtypeStruct((8, d, d), jnp.float32)
+    x = jax.ShapeDtypeStruct((4, d), jnp.float32)
+
+    def stacked(w, x):
+        def body(h, wi):
+            return h @ wi, None
+        h, _ = jax.lax.scan(body, x, w)
+        return h
+
+    def single(w, x):
+        return x @ w[0]
+
+    flops_stacked = hlo_cost(_compiled_text(stacked, w, x))["flops"]
+    flops_single = hlo_cost(_compiled_text(single, w, x))["flops"]
+    ratio = flops_stacked / flops_single
+    assert 6.0 < ratio < 10.0, ratio  # 8 iterations (± fusion noise)
+
+
+def test_hlo_cost_dot_flops_exact():
+    a = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+    b = jax.ShapeDtypeStruct((64, 16), jnp.float32)
+    text = _compiled_text(lambda a, b: a @ b, a, b)
+    flops = hlo_cost(text)["flops"]
+    assert flops >= 2 * 32 * 64 * 16
+    assert flops < 2 * 32 * 64 * 16 * 1.2
+
+
+def test_collective_stats_all_reduce_bytes():
+    import os
+    if jax.device_count() < 2:
+        pytest.skip("needs >1 device (run under forced host devices)")
+
+
+def test_collective_stats_parses_synthetic():
+    hlo = """
+HloModule m
+
+%body (p: (s32[], f32[16])) -> (s32[], f32[16]) {
+  %p = (s32[], f32[16]) parameter(0)
+  %g = f32[16]{0} get-tuple-element(%p), index=1
+  %ar = f32[16]{0} all-reduce(%g), to_apply=%add
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %t = (s32[], f32[16]) tuple(%i, %ar)
+}
+
+ENTRY %main (x: f32[16]) -> f32[16] {
+  %x = f32[16]{0} parameter(0)
+  %ag = f32[64]{0} all-gather(%x), dimensions={0}
+  %w = (s32[], f32[16]) while(%init), condition=%c, body=%body, backend_config={"known_trip_count":{"n":"4"}}
+  ROOT %r = f32[16]{0} get-tuple-element(%w), index=1
+}
+"""
+    stats = collective_stats(hlo)
+    # all-gather 64×4B once + all-reduce 16×4B × 4 trips
+    assert stats["by_op"]["all-gather"] == 256
+    assert stats["by_op"]["all-reduce"] == 16 * 4 * 4
+    assert stats["count"] == 5

@@ -1,0 +1,168 @@
+"""Pallas block-sparse kernel vs the pure-jnp oracle.
+
+Per the framework rules: shape/dtype sweeps asserting allclose against
+``ref.py`` (kernel executed in interpret mode on CPU; TPU is the target).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.compress import BlockSparseFactor, pack_dense, random_block_factor
+from repro.kernels import ref as R
+from repro.kernels.bsr_matmul import bsr_matmul
+from repro.kernels.ops import blockfaust_apply, blockfaust_apply_t, bsr_apply
+from repro.core.compress import BlockFaust
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand_factor(key, ib, ob, bk, bn, k, dtype=jnp.float32):
+    return random_block_factor(key, ib * bk, ob * bn, bk, bn, k, dtype=dtype)
+
+
+SHAPES = [
+    # (batch, in_blocks, out_blocks, bk, bn, k)
+    (8, 4, 4, 8, 8, 2),
+    (16, 8, 2, 8, 16, 3),
+    (8, 2, 8, 16, 8, 1),
+    (32, 4, 4, 8, 8, 4),  # k == ib: fully dense support
+    (8, 16, 4, 8, 128, 4),  # lane-dim-sized bn
+]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_matches_ref_sweep(shape, dtype):
+    b, ib, ob, bk, bn, k = shape
+    key = jax.random.PRNGKey(hash(shape) % (2**31))
+    f = _rand_factor(key, ib, ob, bk, bn, k, dtype=dtype)
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, ib * bk), dtype=dtype)
+    got = bsr_matmul(x, f.values, f.in_idx, bt=8, interpret=True)
+    want = R.bsr_matmul_ref(x, f.values, f.in_idx)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol
+    )
+
+
+def test_ref_matches_dense():
+    """The packed representation applied by ref == dense matmul."""
+    key = jax.random.PRNGKey(0)
+    f = _rand_factor(key, 6, 5, 8, 8, 3)
+    x = jax.random.normal(jax.random.PRNGKey(2), (7, 48))
+    got = R.bsr_matmul_ref(x, f.values, f.in_idx)
+    want = x @ f.todense()
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_pack_dense_roundtrip_apply():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(32, 48)).astype(np.float32))
+    # keep all blocks → exact
+    f = pack_dense(w, 8, 8, k=4)
+    x = jnp.asarray(rng.normal(size=(5, 32)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(bsr_apply(x, f)), np.asarray(x @ w), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_kernel_grads_match_ref_grads():
+    """custom_vjp (Pallas path) gradients == autodiff of the reference."""
+    key = jax.random.PRNGKey(3)
+    f = _rand_factor(key, 4, 4, 8, 8, 2)
+    x = jax.random.normal(jax.random.PRNGKey(4), (8, 32))
+    dy_seed = jax.random.normal(jax.random.PRNGKey(5), (8, 32))
+
+    def loss_kernel(x, values):
+        fac = BlockSparseFactor(values, f.in_idx, f.in_features, f.out_features)
+        y = bsr_apply(x, fac, use_kernel=True, bt=8, interpret=True)
+        return jnp.sum(y * dy_seed)
+
+    def loss_ref(x, values):
+        fac = BlockSparseFactor(values, f.in_idx, f.in_features, f.out_features)
+        y = bsr_apply(x, fac, use_kernel=False)
+        return jnp.sum(y * dy_seed)
+
+    gx_k, gv_k = jax.grad(loss_kernel, argnums=(0, 1))(x, f.values)
+    gx_r, gv_r = jax.grad(loss_ref, argnums=(0, 1))(x, f.values)
+    np.testing.assert_allclose(np.asarray(gx_k), np.asarray(gx_r), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gv_k), np.asarray(gv_r), rtol=1e-4, atol=1e-5)
+
+
+def test_chain_apply_and_adjoint_match_dense():
+    key = jax.random.PRNGKey(6)
+    k1, k2, k3 = jax.random.split(key, 3)
+    factors = (
+        _rand_factor(k1, 4, 6, 8, 8, 2),
+        _rand_factor(k2, 6, 6, 8, 8, 3),
+        _rand_factor(k3, 6, 8, 8, 8, 2),
+    )
+    bf = BlockFaust(factors, jnp.asarray(1.3, jnp.float32))
+    w = np.asarray(bf.todense())
+    x = jax.random.normal(jax.random.PRNGKey(7), (9, 32))
+    y = blockfaust_apply(x, bf)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x) @ w, rtol=1e-4, atol=1e-5)
+    z = jax.random.normal(jax.random.PRNGKey(8), (9, 64))
+    yt = blockfaust_apply_t(z, bf)
+    np.testing.assert_allclose(np.asarray(yt), np.asarray(z) @ w.T, rtol=1e-4, atol=1e-5)
+
+
+def test_chain_apply_kernel_path():
+    key = jax.random.PRNGKey(9)
+    k1, k2 = jax.random.split(key)
+    factors = (
+        _rand_factor(k1, 4, 6, 8, 8, 2),
+        _rand_factor(k2, 6, 4, 8, 8, 2),
+    )
+    bf = BlockFaust(factors, jnp.asarray(0.7, jnp.float32))
+    x = jax.random.normal(jax.random.PRNGKey(10), (5, 32))  # batch not / bt
+    got = blockfaust_apply(x, bf, use_kernel=True, bt=8, interpret=True)
+    want = blockfaust_apply(x, bf, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_nonmultiple_feature_padding():
+    """in/out features that aren't block multiples (vocab-style padding)."""
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.normal(size=(20, 37)).astype(np.float32))
+    f = pack_dense(w, 8, 8, k=3)
+    assert f.in_features == 20 and f.out_features == 37
+    x = jnp.asarray(rng.normal(size=(3, 20)).astype(np.float32))
+    got = bsr_apply(x, f)
+    assert got.shape == (3, 37)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(x @ f.todense()), rtol=1e-5, atol=1e-5
+    )
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    b=st.integers(1, 9),
+    ib=st.integers(1, 5),
+    ob=st.integers(1, 5),
+    k=st.integers(1, 5),
+    seed=st.integers(0, 2**30),
+)
+def test_property_kernel_equals_ref(b, ib, ob, k, seed):
+    k = min(k, ib)
+    f = _rand_factor(jax.random.PRNGKey(seed), ib, ob, 8, 8, k)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (b, ib * 8))
+    got = bsr_apply(x, f, use_kernel=True, bt=8, interpret=True)
+    want = bsr_apply(x, f, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_linearity_property():
+    """FAµST apply is linear: f(ax + by) == a f(x) + b f(y)."""
+    f = _rand_factor(jax.random.PRNGKey(11), 4, 4, 8, 8, 2)
+    bf = BlockFaust((f,), jnp.asarray(1.0, jnp.float32))
+    x = jax.random.normal(jax.random.PRNGKey(12), (4, 32))
+    y = jax.random.normal(jax.random.PRNGKey(13), (4, 32))
+    lhs = blockfaust_apply(2.0 * x - 3.0 * y, bf)
+    rhs = 2.0 * blockfaust_apply(x, bf) - 3.0 * blockfaust_apply(y, bf)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-4, atol=1e-4)

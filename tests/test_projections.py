@@ -1,0 +1,143 @@
+"""Projection operators (paper Appendix A) — oracle + property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import projections as P
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _np_proj_global(x, k):
+    flat = np.abs(x).ravel()
+    if k < flat.size:
+        thresh_idx = np.argsort(-flat, kind="stable")[:k]
+        mask = np.zeros_like(flat)
+        mask[thresh_idx] = 1.0
+        out = (x.ravel() * mask).reshape(x.shape)
+    else:
+        out = x.copy()
+    nrm = np.linalg.norm(out)
+    return out / nrm if nrm > 1e-12 else out * 0.0
+
+
+def test_global_topk_matches_numpy_oracle():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(13, 7)).astype(np.float32)
+    for k in [1, 5, 20, 13 * 7]:
+        got = np.asarray(P.proj_global_topk(jnp.asarray(x), k))
+        want = _np_proj_global(x, k)
+        # supports must coincide; values equal up to normalization fp
+        assert (got != 0).sum() == min(k, x.size)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_col_topk_sparsity_and_norm():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(16, 9)).astype(np.float32))
+    out = P.proj_col_topk(x, 3)
+    nnz_per_col = np.asarray((out != 0).sum(axis=0))
+    assert (nnz_per_col <= 3).all()
+    assert np.isclose(float(jnp.linalg.norm(out)), 1.0, atol=1e-5)
+
+
+def test_row_topk_sparsity():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(6, 11)).astype(np.float32))
+    out = P.proj_row_topk(x, 4)
+    assert (np.asarray((out != 0).sum(axis=1)) <= 4).all()
+
+
+def test_support_projection():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(8, 8)).astype(np.float32))
+    supp = jnp.asarray((rng.random((8, 8)) < 0.3).astype(np.float32))
+    out = P.proj_support(x, supp)
+    assert np.all(np.asarray(out)[np.asarray(supp) == 0] == 0)
+    assert np.isclose(float(jnp.linalg.norm(out)), 1.0, atol=1e-5)
+
+
+def test_block_topk_keeps_whole_blocks():
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(8, 12)).astype(np.float32))
+    out = np.asarray(P.proj_block_topk(x, 4, 4, n_blocks=2))
+    blocks = out.reshape(2, 4, 3, 4).transpose(0, 2, 1, 3)
+    live = [(i, j) for i in range(2) for j in range(3) if np.any(blocks[i, j] != 0)]
+    assert len(live) <= 2
+    # kept blocks are fully dense copies (scaled) of the input blocks
+    xb = np.asarray(x).reshape(2, 4, 3, 4).transpose(0, 2, 1, 3)
+    for i, j in live:
+        ratio = blocks[i, j] / xb[i, j]
+        assert np.allclose(ratio, ratio.ravel()[0], rtol=1e-4)
+
+
+def test_block_topk_selects_highest_energy():
+    x = np.zeros((8, 8), dtype=np.float32)
+    x[0:4, 4:8] = 5.0  # block (0,1) highest energy
+    x[4:8, 0:4] = 1.0
+    out = np.asarray(P.proj_block_topk(jnp.asarray(x), 4, 4, n_blocks=1))
+    assert np.all(out[0:4, 4:8] != 0)
+    assert np.all(out[4:8, 0:4] == 0)
+
+
+def test_blockrow_blockcol_budgets():
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(12, 16)).astype(np.float32))
+    o_row = np.asarray(P.proj_blockrow_topk(x, 4, 4, k_per_row=2))
+    o_col = np.asarray(P.proj_blockcol_topk(x, 4, 4, k_per_col=1))
+    br = o_row.reshape(3, 4, 4, 4).transpose(0, 2, 1, 3)
+    for i in range(3):
+        assert sum(np.any(br[i, j] != 0) for j in range(4)) <= 2
+    bc = o_col.reshape(3, 4, 4, 4).transpose(0, 2, 1, 3)
+    for j in range(4):
+        assert sum(np.any(bc[i, j] != 0) for i in range(3)) <= 1
+
+
+def test_piecewise_const_projection():
+    # Prop. A.2: constant over cells, ≤ s nonzero cells
+    x = jnp.asarray(np.arange(16, dtype=np.float32).reshape(4, 4))
+    cell_ids = jnp.asarray(
+        np.repeat(np.arange(4), 4).reshape(4, 4)  # one cell per row
+    )
+    out = np.asarray(P.proj_piecewise_const(x, cell_ids, n_cells=4, s=2))
+    # each row constant
+    assert np.allclose(out, out[:, :1] * np.ones((1, 4)))
+    # only 2 nonzero rows, the ones with largest |mean|*sqrt(4): rows 2,3
+    nz_rows = np.where(np.abs(out).sum(axis=1) > 0)[0]
+    np.testing.assert_array_equal(nz_rows, [2, 3])
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(2, 12),
+    n=st.integers(2, 12),
+    k=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_global_topk_idempotent_and_unit_norm(m, n, k, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+    once = P.proj_global_topk(x, k)
+    twice = P.proj_global_topk(once, k)
+    if float(jnp.linalg.norm(once)) > 0:
+        assert np.isclose(float(jnp.linalg.norm(once)), 1.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(once), np.asarray(twice), atol=2e-5)
+    assert int((np.asarray(once) != 0).sum()) <= k
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rb=st.integers(1, 4),
+    cb=st.integers(1, 4),
+    k=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_blockrow_projection_nonexpansive(rb, cb, k, seed):
+    """Projections onto closed sets through the origin shrink norm."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(rb * 4, cb * 4)).astype(np.float32))
+    out = P.proj_blockrow_topk(x, 4, 4, k_per_row=min(k, cb), normalize=False)
+    assert float(jnp.linalg.norm(out)) <= float(jnp.linalg.norm(x)) + 1e-5

@@ -1,8 +1,20 @@
 """Paper §II-B2 RCG flop model: measured apply time + roofline transfer.
 
-Measures dense vs FAµST (packed BlockFaust, ref path) matmuls on CPU and
-reports the flop model (2·s_tot vs 2·m·n) plus the TPU roofline estimate
-(both compute and memory terms scale by 1/RCG — DESIGN.md §3).
+Measures dense vs FAµST matmuls and reports the flop model (2·s_tot vs
+2·m·n) plus the TPU roofline estimate.  Reports **both** chain paths:
+
+* ``per-factor`` — one launch per factor (``blockfaust_apply``), which on
+  hardware pays a 2·batch·d_j HBM round-trip of the intermediate
+  activations at every factor boundary;
+* ``fused``      — the single-``pallas_call`` chain kernel
+  (``blockfaust_apply(..., fuse=True)``, ``kernels/chain.py``) whose
+  intermediates stay in VMEM scratch, so the memory-roofline term drops
+  from ``s_tot + 2·batch·Σ_j d_j`` to ``s_tot + batch·(d_in + d_out)``.
+
+Also verifies the launch-count claim structurally: the fused path stages
+exactly **one** pallas_call into the jaxpr vs J on the per-factor path.
+On CPU the Pallas paths run in interpret mode (emulation — the measured
+times are for smoke value only; the roofline columns carry the TPU story).
 """
 from __future__ import annotations
 
@@ -11,20 +23,24 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, timeit_us
-from repro.core.compress import BlockFaust, random_block_factor
-from repro.kernels.ops import blockfaust_apply
+from repro.core.compress import BlockFaust, pack_chain, random_block_factor
+from repro.kernels.ops import blockfaust_apply, packed_chain_apply
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
 
 
-def run(cases=((1024, 4096, 2, 16, 4), (2048, 8192, 2, 16, 4)),
+def count_pallas_calls(fn, *args) -> int:
+    """Number of pallas_call primitives staged into ``fn``'s jaxpr."""
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    return str(jaxpr).count("pallas_call")
+
+
+def run(cases=((1024, 4096, 2, 4, 128), (2048, 8192, 2, 4, 128), (2048, 8192, 3, 4, 128)),
         batch: int = 128) -> None:
-    for in_dim, out_dim, n_factors, blocks_k, block in [
-        (1024, 4096, 2, 4, 128),
-        (2048, 8192, 2, 4, 128),
-        (2048, 8192, 3, 4, 128),
-    ]:
+    on_tpu = jax.default_backend() == "tpu"
+    interpret = not on_tpu
+    for in_dim, out_dim, n_factors, blocks_k, block in cases:
         keys = jax.random.split(jax.random.PRNGKey(0), n_factors)
         dims = [in_dim] + [min(in_dim, out_dim)] * (n_factors - 1) + [out_dim]
         factors = tuple(
@@ -32,25 +48,49 @@ def run(cases=((1024, 4096, 2, 16, 4), (2048, 8192, 2, 16, 4)),
             for i in range(n_factors)
         )
         bf = BlockFaust(factors, jnp.asarray(1.0))
+        chain = pack_chain(bf)
         w = bf.todense()
         x = jax.random.normal(jax.random.PRNGKey(1), (batch, in_dim))
 
         dense_fn = jax.jit(lambda v: v @ w)
         faust_fn = jax.jit(lambda v: blockfaust_apply(v, bf))
+        perfac_fn = jax.jit(
+            lambda v: blockfaust_apply(v, bf, use_kernel=True, interpret=interpret)
+        )
+        fused_fn = jax.jit(
+            lambda v: packed_chain_apply(v, chain, use_kernel=True, interpret=interpret)
+        )
         t_dense = timeit_us(dense_fn, x)
         t_faust = timeit_us(faust_fn, x)
+        t_perfac = timeit_us(perfac_fn, x)
+        t_fused = timeit_us(fused_fn, x)
+        n_calls_perfac = count_pallas_calls(perfac_fn, x)
+        n_calls_fused = count_pallas_calls(fused_fn, x)
+        assert n_calls_fused == 1, n_calls_fused
+        assert n_calls_perfac == n_factors, (n_calls_perfac, n_factors)
+
         rcg = bf.rcg()
         dense_flops = 2 * in_dim * out_dim * batch
         faust_flops = 2 * bf.s_tot * batch
-        # TPU roofline estimate for the unembedding-style shape (bf16)
-        t_tpu_dense = max(dense_flops / PEAK_FLOPS, 2 * in_dim * out_dim / HBM_BW)
-        t_tpu_faust = max(faust_flops / PEAK_FLOPS, 2 * bf.s_tot / HBM_BW)
+        # TPU roofline (bf16 bytes): weights + boundary activations only for
+        # the fused path, + intermediate activation round-trips per-factor
+        act_inner = 2 * batch * sum(dims[1:-1])  # stored + reloaded
+        act_edge = batch * (in_dim + out_dim)
+        bytes_fused = 2 * (bf.s_tot + act_edge)  # leading 2 = bf16 bytes/elt
+        bytes_perfac = 2 * (bf.s_tot + act_edge + act_inner)
+        t_tpu_dense = max(dense_flops / PEAK_FLOPS, 2 * (in_dim * out_dim + act_edge) / HBM_BW)
+        t_tpu_fused = max(faust_flops / PEAK_FLOPS, bytes_fused / HBM_BW)
+        t_tpu_perfac = max(faust_flops / PEAK_FLOPS, bytes_perfac / HBM_BW)
         emit(
             f"apply_{in_dim}x{out_dim}_J{n_factors}",
             t_faust,
-            f"dense_us={t_dense:.1f};speedup={t_dense / max(t_faust, 1e-9):.2f};"
+            f"dense_us={t_dense:.1f};perfactor_us={t_perfac:.1f};"
+            f"fused_us={t_fused:.1f};pallas_calls={n_calls_perfac}->{n_calls_fused};"
+            f"speedup={t_dense / max(t_faust, 1e-9):.2f};"
             f"RCG={rcg:.2f};flop_gain={dense_flops / faust_flops:.2f};"
-            f"tpu_roofline_gain={t_tpu_dense / t_tpu_faust:.2f}",
+            f"tpu_roofline_gain={t_tpu_dense / t_tpu_fused:.2f};"
+            f"tpu_fuse_gain={t_tpu_perfac / t_tpu_fused:.2f};"
+            f"interpret={int(interpret)}",
         )
 
 

@@ -1,0 +1,45 @@
+#!/usr/bin/env bash
+# Tier-1 CI: run the test suite under a wall-clock timeout and report the
+# pass/fail delta vs the recorded seed baseline.
+#
+#   ./scripts/ci.sh            # default 900 s budget
+#   CI_TIMEOUT=300 ./scripts/ci.sh
+#
+# Seed baseline (commit dfcff03): collection itself failed — 2 collection
+# errors (hard `hypothesis` imports), 0 tests ran.  Any green run beats it;
+# the delta line makes regressions vs the current numbers obvious too.
+set -u
+cd "$(dirname "$0")/.."
+
+CI_TIMEOUT="${CI_TIMEOUT:-900}"
+# Seed-baseline numbers (what `python -m pytest -q` did at the seed commit):
+SEED_PASSED=0
+SEED_FAILED=0
+SEED_ERRORS=2
+
+out=$(PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout "$CI_TIMEOUT" \
+      python -m pytest -q tests 2>&1)
+status=$?
+echo "$out" | tail -20
+
+if [ "$status" -eq 124 ]; then
+    echo "ci: TIMEOUT after ${CI_TIMEOUT}s"
+    exit 124
+fi
+
+summary=$(echo "$out" | tail -5)
+count() { echo "$summary" | grep -oE "[0-9]+ $1" | tail -1 | grep -oE "^[0-9]+" || echo 0; }
+passed=$(count passed)
+failed=$(count failed)
+errors=$(count "errors?")
+
+echo "ci: passed=${passed} failed=${failed} errors=${errors}" \
+     "(seed: passed=${SEED_PASSED} failed=${SEED_FAILED} errors=${SEED_ERRORS})"
+echo "ci: delta vs seed: passed $((passed - SEED_PASSED))," \
+     "failed $((failed - SEED_FAILED)), errors $((errors - SEED_ERRORS))"
+
+if [ "$failed" -gt "$SEED_FAILED" ] || [ "$errors" -gt "$SEED_ERRORS" ]; then
+    echo "ci: WORSE THAN SEED"
+    exit 1
+fi
+exit "$status"

@@ -132,6 +132,124 @@ class BlockFaust:
 
 
 # ---------------------------------------------------------------------------
+# Fused-chain packing (single-pallas_call apply — see repro.kernels.chain)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainPlan:
+    """Static (hashable) metadata for a flat-packed FAµST chain.
+
+    The fused kernel enumerates one *step* per stored block, in
+    ``(factor j, output block o, gathered slot k)`` lexicographic order, so
+    step ``s`` of the flat arrays is block ``(j, o, k)`` with
+    ``s = offsets[j] + o·k_blocks[j] + k``.  Everything here is a Python
+    int/tuple: the plan travels as a pytree aux / ``nondiff_argnums`` value
+    and never enters the traced graph.
+    """
+
+    block: int  # uniform square block side (bk == bn for every factor)
+    in_blocks: tuple[int, ...]  # IB_j  = ceil(in_features_j / block)
+    out_blocks: tuple[int, ...]  # O_j  = n_out_blocks of factor j
+    k_blocks: tuple[int, ...]  # K_j  = gathered blocks per output block
+    offsets: tuple[int, ...]  # len J+1: step offset of factor j (offsets[J] == n_steps)
+    in_feats: tuple[int, ...]  # unpadded in_features per factor
+    out_feats: tuple[int, ...]  # unpadded out_features per factor
+
+    @property
+    def n_factors(self) -> int:
+        return len(self.out_blocks)
+
+    @property
+    def n_steps(self) -> int:
+        return self.offsets[-1]
+
+    @property
+    def max_blocks(self) -> int:
+        """Widest activation (in blocks) anywhere along the chain — sizes the
+        kernel's ping-pong VMEM scratch."""
+        return max(max(self.in_blocks), max(self.out_blocks))
+
+    @property
+    def in_features(self) -> int:
+        return self.in_feats[0]
+
+    @property
+    def out_features(self) -> int:
+        return self.out_feats[-1]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class PackedChain:
+    """Flat-packed FAµST chain: every factor's blocks concatenated so a single
+    Pallas launch can stream them (``repro.kernels.chain.chain_matmul``).
+
+        values : (S, block, block)  — S = Σ_j O_j·K_j blocks, (j,o,k) order
+        in_idx : (S,) int32         — input block id within the *current*
+                                      activation for each step
+
+    The static layout lives in :class:`ChainPlan` (pytree aux), so a
+    ``PackedChain`` jits/vmaps like any array pytree.
+    """
+
+    values: Array  # (S, block, block)
+    in_idx: Array  # (S,) int32
+    lam: Array  # scalar
+    plan: ChainPlan
+
+    def tree_flatten(self):
+        return (self.values, self.in_idx, self.lam), self.plan
+
+    @classmethod
+    def tree_unflatten(cls, plan, children):
+        values, in_idx, lam = children
+        return cls(values, in_idx, lam, plan)
+
+
+def pack_chain(bfaust: BlockFaust) -> PackedChain:
+    """Flatten a :class:`BlockFaust` into the fused-kernel layout.
+
+    Requires uniform square blocks and a contiguous chain (each factor's
+    padded output domain is exactly the next factor's padded input domain)
+    — both hold for every factor produced by :func:`random_block_factor`
+    with one block size or by :func:`compress_matrix`.  Raises
+    ``ValueError`` otherwise; callers fall back to the per-factor path.
+    """
+    factors = bfaust.factors
+    blk = factors[0].bk
+    for f in factors:
+        if f.bk != blk or f.bn != blk:
+            raise ValueError(
+                f"pack_chain needs uniform square blocks; got ({f.bk},{f.bn}) vs {blk}"
+            )
+    for a, b in zip(factors[:-1], factors[1:]):
+        if a.out_features != b.in_features or a.n_out_blocks != b.n_in_blocks:
+            raise ValueError(
+                "pack_chain needs a contiguous chain: factor boundary "
+                f"{a.out_features}/{a.n_out_blocks} blocks → "
+                f"{b.in_features}/{b.n_in_blocks} blocks"
+            )
+    offsets = [0]
+    for f in factors:
+        offsets.append(offsets[-1] + f.n_out_blocks * f.k)
+    plan = ChainPlan(
+        block=blk,
+        in_blocks=tuple(f.n_in_blocks for f in factors),
+        out_blocks=tuple(f.n_out_blocks for f in factors),
+        k_blocks=tuple(f.k for f in factors),
+        offsets=tuple(offsets),
+        in_feats=tuple(f.in_features for f in factors),
+        out_feats=tuple(f.out_features for f in factors),
+    )
+    values = jnp.concatenate([f.values.reshape(-1, blk, blk) for f in factors])
+    in_idx = jnp.concatenate(
+        [f.in_idx.reshape(-1).astype(jnp.int32) for f in factors]
+    )
+    return PackedChain(values, in_idx, bfaust.lam, plan)
+
+
+# ---------------------------------------------------------------------------
 # Packing
 # ---------------------------------------------------------------------------
 

@@ -1,3 +1,9 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernel layer for the FAµST apply hot-spot.
+
+``bsr_matmul.py`` — single block-sparse factor, one launch per factor.
+``chain.py``      — fused multi-factor chain: one launch for the whole
+                    product, activations resident in VMEM (the general
+                    subsystem; ``bsr_matmul`` is its J = 1 special case).
+``ops.py``        — jit'd wrappers + custom VJPs (the public API).
+``ref.py``        — pure-jnp oracles (reference semantics + backward forms).
+"""

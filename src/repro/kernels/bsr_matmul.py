@@ -22,6 +22,13 @@ per k step; bytes moved per step ≈ bt·bk + bk·bn (+ bt·bn once), so with
 bt = bk = bn = 128 the kernel runs at dense-matmul intensity while touching
 only s_tot values — i.e. RCG transfers to both the compute and memory
 roofline terms.
+
+*Chain* applies, however, pay an extra 2·batch·d_j HBM round-trip of the
+intermediate activations at every factor boundary when driven one launch per
+factor.  ``kernels/chain.py`` generalizes this kernel to the whole
+``x @ F_1 @ ... @ F_J`` product in a single ``pallas_call`` (this kernel is
+its J = 1 special case); prefer ``blockfaust_apply(..., fuse=True)`` for
+multi-factor chains.
 """
 from __future__ import annotations
 

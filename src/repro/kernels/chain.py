@@ -1,0 +1,153 @@
+"""Pallas TPU kernel: fused multi-factor FAµST chain apply.
+
+The paper's O(s_tot) multiplication (§II-B2) is a *chain* — ``y = lam ·
+x @ F_1 @ ... @ F_J`` — but launching one kernel per factor (``bsr_matmul``)
+round-trips every intermediate activation through HBM, adding a
+``2·Σ_j batch·d_j`` memory term that the RCG flop model never pays.  For
+inference-shaped batches the per-factor path is therefore *memory*-bound at
+the factor boundaries exactly where Le Magoarou & Gribonval promise a
+compute win.  This kernel applies the whole chain in **one** ``pallas_call``:
+
+  * the packed flat layout (``repro.core.compress.PackedChain``) concatenates
+    all factors' ``(block × block)`` value blocks into ``values (S, blk, blk)``
+    in ``(factor j, out block o, slot k)`` order, so the grid's minor
+    dimension simply streams block ``s`` per step with automatic double
+    buffering — HBM traffic for weights is exactly ``s_tot`` values, once;
+  * a per-step metadata table (scalar-prefetched, ``(S, 7)`` int32) tells
+    each step which input block of the resident activation to read, which
+    output block it accumulates into, which of the two ping-pong activation
+    buffers is current, and whether it opens/closes an accumulation group or
+    finishes the chain;
+  * intermediate activations live in a ``(2, B_max, bt, blk)`` VMEM scratch
+    (block-major so all addressing is a dynamic *leading* index) and never
+    touch HBM: factor ``j`` reads buffer ``j % 2`` and writes ``1 - j % 2``,
+    the last factor writes the output block directly;
+  * accumulation is f32 in a ``(bt, blk)`` scratch regardless of input
+    dtype, downcast once per output block — bit-compatible with the
+    per-factor kernel's behaviour;
+  * ragged (non-block-multiple) feature dims are handled by masking the tail
+    columns of boundary blocks at flush time (``ncols`` metadata column),
+    reproducing the per-factor path's slice-then-zero-pad semantics.
+
+Arithmetic intensity: each step is one (bt × blk) @ (blk × blk) MXU matmul
+against blk·blk weight bytes moved; activations are VMEM-resident, so with
+bt = blk = 128 the chain runs at dense-matmul intensity end to end while
+moving each of the s_tot weights exactly once — the memory-roofline term of
+``benchmarks/apply_speed.py`` scales by 1/RCG with **no** J-proportional
+activation traffic.
+
+Grid: ``(batch tiles, S)`` with the step dimension minor, so for each batch
+tile the S steps run sequentially on-core while the next tile's ``x`` block
+prefetches.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.compress import ChainPlan
+
+Array = jax.Array
+
+# meta columns (per step s):
+#   0 in_blk   input block id within the current activation buffer (runtime)
+#   1 out_blk  output block id this step accumulates into
+#   2 parity   which ping-pong buffer holds this factor's input (j % 2)
+#   3 is_k0    1 ⇔ first slot of an output block: zero the accumulator
+#   4 is_kend  1 ⇔ last slot of an output block: flush the accumulator
+#   5 is_last  1 ⇔ step belongs to the final factor: flush to the output ref
+#   6 ncols    valid columns in the flushed block (< blk only at a ragged
+#              feature boundary; the tail is zeroed to match the per-factor
+#              path's slice-then-pad)
+META_COLS = 7
+
+
+def _chain_kernel(meta_ref, x_ref, v_ref, o_ref, act_ref, acc_ref, *, n_in0, blk):
+    s = pl.program_id(1)
+    i_blk = meta_ref[s, 0]
+    o_blk = meta_ref[s, 1]
+    par = meta_ref[s, 2]
+
+    @pl.when(s == 0)
+    def _load_x():
+        # Stage the batch tile into ping-pong buffer 0, block-major.
+        for b in range(n_in0):
+            act_ref[0, b] = x_ref[:, b * blk : (b + 1) * blk]
+
+    @pl.when(meta_ref[s, 3] == 1)
+    def _open():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        act_ref[par, i_blk],
+        v_ref[0],
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(meta_ref[s, 4] == 1)
+    def _flush():
+        cols = jax.lax.broadcasted_iota(jnp.int32, acc_ref.shape, 1)
+        tile = jnp.where(cols < meta_ref[s, 6], acc_ref[...], 0.0)
+
+        @pl.when(meta_ref[s, 5] == 0)
+        def _to_scratch():
+            act_ref[1 - par, o_blk] = tile.astype(act_ref.dtype)
+
+        @pl.when(meta_ref[s, 5] == 1)
+        def _to_out():
+            o_ref[:, pl.ds(o_blk * blk, blk)] = tile.astype(o_ref.dtype)
+
+
+def chain_matmul(
+    x: Array,
+    values: Array,
+    meta: Array,
+    *,
+    plan: ChainPlan,
+    bt: int = 128,
+    interpret: bool = False,
+) -> Array:
+    """Fused ``y = x @ F_1 @ ... @ F_J`` in a single ``pallas_call``.
+
+    ``x``: (B, IB_1·blk) with B % bt == 0; ``values``: (S, blk, blk) flat
+    blocks; ``meta``: (S, META_COLS) int32 step table (see module header;
+    build with :func:`repro.kernels.ops.chain_meta`). Returns
+    (B, O_J·blk) — ragged tails already zeroed, caller slices/scales.
+    """
+    b, in_pad = x.shape
+    blk = plan.block
+    n_steps = plan.n_steps
+    assert b % bt == 0, (b, bt)
+    assert in_pad == plan.in_blocks[0] * blk, (in_pad, plan.in_blocks[0], blk)
+    assert values.shape == (n_steps, blk, blk), values.shape
+    assert meta.shape == (n_steps, META_COLS), meta.shape
+    out_w = plan.out_blocks[-1] * blk
+    grid = (b // bt, n_steps)
+
+    return pl.pallas_call(
+        functools.partial(_chain_kernel, n_in0=plan.in_blocks[0], blk=blk),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                # x: whole batch tile, refetched only when the tile changes
+                pl.BlockSpec((bt, in_pad), lambda bi, s, meta: (bi, 0)),
+                # values: the s-th flat block — streams with double buffering
+                pl.BlockSpec((1, blk, blk), lambda bi, s, meta: (s, 0, 0)),
+            ],
+            # output: revisited across all S steps, flushed when bi advances
+            out_specs=pl.BlockSpec((bt, out_w), lambda bi, s, meta: (bi, 0)),
+            scratch_shapes=[
+                # ping-pong activation buffers, block-major
+                pltpu.VMEM((2, plan.max_blocks, bt, blk), x.dtype),
+                # f32 accumulator for the open output block
+                pltpu.VMEM((bt, blk), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, out_w), x.dtype),
+        interpret=interpret,
+    )(meta, x, values)

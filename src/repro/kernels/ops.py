@@ -1,11 +1,19 @@
 """Jit'd wrappers around the block-sparse FAµST apply.
 
-``bsr_apply``         — single factor, ref or Pallas path, padding handled.
-``blockfaust_apply``  — full chain ``y = lam · x@F_1@...@F_J``.
+``bsr_apply``          — single factor, ref or Pallas path, padding handled.
+``blockfaust_apply``   — full chain ``y = lam · x@F_1@...@F_J``; with
+                         ``fuse=True`` the whole chain is one ``pallas_call``
+                         (``kernels/chain.py``) instead of J launches.
+``packed_chain_apply`` — the fused apply on a pre-packed
+                         :class:`~repro.core.compress.PackedChain` (skips
+                         re-flattening per call).
 
-The Pallas path carries a ``custom_vjp`` whose backward pass uses the
+Both Pallas paths carry a ``custom_vjp`` whose backward pass uses the
 gather/scatter einsum forms from ``ref.py`` (identical to XLA's autodiff of
-the reference), so FAµST layers are trainable on either path.
+the reference), so FAµST layers are trainable on every path.  The fused
+backward *rematerializes* the per-factor activations with the reference
+oracle (they never left VMEM in the forward, so there is nothing to save —
+checkpoint-style recompute keeps the memory win).
 """
 from __future__ import annotations
 
@@ -15,9 +23,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.compress import BlockFaust, BlockSparseFactor
+from repro.core.compress import BlockFaust, BlockSparseFactor, ChainPlan, PackedChain, pack_chain
 from repro.kernels import ref as _ref
 from repro.kernels.bsr_matmul import bsr_matmul
+from repro.kernels.chain import META_COLS, chain_matmul
 
 Array = jax.Array
 
@@ -46,6 +55,81 @@ def _bsr_pallas_bwd(bt, interpret, res, dy):
 
 
 _bsr_pallas.defvjp(_bsr_pallas_fwd, _bsr_pallas_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Fused chain path with custom VJP
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=64)
+def _chain_meta_static(plan: ChainPlan) -> np.ndarray:
+    """Static meta columns (everything but the runtime ``in_idx`` column 0)
+    for the fused kernel's step table — see ``kernels/chain.py`` header."""
+    blk = plan.block
+    rows = []
+    for j in range(plan.n_factors):
+        o_count, k_count = plan.out_blocks[j], plan.k_blocks[j]
+        o = np.repeat(np.arange(o_count), k_count)
+        k = np.tile(np.arange(k_count), o_count)
+        cols = np.empty((o_count * k_count, META_COLS - 1), dtype=np.int32)
+        cols[:, 0] = o  # out_blk
+        cols[:, 1] = j % 2  # parity
+        cols[:, 2] = k == 0  # is_k0
+        cols[:, 3] = k == k_count - 1  # is_kend
+        cols[:, 4] = j == plan.n_factors - 1  # is_last
+        cols[:, 5] = np.minimum(blk, plan.out_feats[j] - o * blk)  # ncols
+        rows.append(cols)
+    return np.concatenate(rows, axis=0)
+
+
+def chain_meta(plan: ChainPlan, in_idx: Array) -> Array:
+    """Assemble the (S, META_COLS) scalar-prefetch step table: runtime
+    ``in_idx`` in column 0, static plan-derived columns after it."""
+    static = jnp.asarray(_chain_meta_static(plan))
+    return jnp.concatenate([in_idx[:, None].astype(jnp.int32), static], axis=1)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _chain_pallas(x, values, in_idx, plan: ChainPlan, bt: int, interpret: bool):
+    return chain_matmul(
+        x, values, chain_meta(plan, in_idx), plan=plan, bt=bt, interpret=interpret
+    )
+
+
+def _chain_pallas_fwd(x, values, in_idx, plan, bt, interpret):
+    y = _chain_pallas(x, values, in_idx, plan, bt, interpret)
+    return y, (x, values, in_idx)
+
+
+def _chain_pallas_bwd(plan, bt, interpret, res, dy):
+    x, values, in_idx = res
+    blk = plan.block
+    # Rematerialize the per-factor inputs (the fused forward keeps them in
+    # VMEM scratch only) with the reference oracle, then walk the chain
+    # backwards with the gather/scatter einsum forms.
+    acts = [x]
+    y = x
+    for j in range(plan.n_factors - 1):
+        vj, ij = _ref.factor_slices(values, in_idx, plan, j)
+        y = _ref._mask_tail(_ref.bsr_matmul_ref(y, vj, ij), plan.out_feats[j])
+        acts.append(y)
+    g = dy
+    dvals = []
+    for j in reversed(range(plan.n_factors)):
+        vj, ij = _ref.factor_slices(values, in_idx, plan, j)
+        # forward zeroed the ragged tail, so its cotangent is dropped too
+        g = _ref._mask_tail(g, plan.out_feats[j])
+        dvals.append(
+            _ref.bsr_matmul_dvalues(acts[j], g, ij, (blk, blk)).reshape(-1, blk, blk)
+        )
+        g = _ref.bsr_matmul_dx(g, vj, ij, plan.in_blocks[j] * blk)
+    dvalues = jnp.concatenate(dvals[::-1], axis=0)
+    d_idx = np.zeros(in_idx.shape, dtype=jax.dtypes.float0)
+    return g, dvalues, d_idx
+
+
+_chain_pallas.defvjp(_chain_pallas_fwd, _chain_pallas_bwd)
 
 
 # ---------------------------------------------------------------------------
@@ -82,6 +166,43 @@ def bsr_apply(
     return y
 
 
+def packed_chain_apply(
+    x: Array,
+    chain: PackedChain,
+    *,
+    use_kernel: bool = True,
+    bt: int = 128,
+    interpret: bool = False,
+) -> Array:
+    """Fused FAµST chain apply on a flat-packed chain: one ``pallas_call``
+    for the whole product (vs J launches on the per-factor path), with the
+    intermediate activations resident in VMEM scratch throughout.
+
+    Arbitrary leading batch dims; pads/slices features and batch like
+    :func:`bsr_apply`.  ``use_kernel=False`` runs the step-exact jnp oracle
+    (``ref.packed_chain_ref``) — same packed arrays, no Pallas.
+    """
+    plan = chain.plan
+    in_pad = plan.in_blocks[0] * plan.block
+    pad = in_pad - x.shape[-1]
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    if not use_kernel:
+        y = _ref.packed_chain_ref(x, chain.values, chain.in_idx, plan)
+    else:
+        batch_shape = x.shape[:-1]
+        b = int(np.prod(batch_shape)) if batch_shape else 1
+        x2 = x.reshape(b, in_pad)
+        bpad = (-b) % bt
+        if bpad:
+            x2 = jnp.pad(x2, ((0, bpad), (0, 0)))
+        y2 = _chain_pallas(x2, chain.values, chain.in_idx, plan, bt, interpret)
+        y = y2[:b].reshape(*batch_shape, -1)
+    if y.shape[-1] != plan.out_features:
+        y = y[..., : plan.out_features]
+    return chain.lam.astype(y.dtype) * y
+
+
 def blockfaust_apply(
     x: Array,
     bfaust: BlockFaust,
@@ -89,8 +210,22 @@ def blockfaust_apply(
     use_kernel: bool = False,
     bt: int = 128,
     interpret: bool = False,
+    fuse: bool = False,
 ) -> Array:
-    """Full FAµST chain apply (the paper's O(s_tot) multiplication)."""
+    """Full FAµST chain apply (the paper's O(s_tot) multiplication).
+
+    ``fuse=True`` routes through the packed-chain path (requires uniform
+    square blocks and a contiguous chain — everything ``FaustSpec``/
+    ``compress_matrix`` produce): with ``use_kernel=True`` that is the fused
+    single-``pallas_call`` chain kernel; with the default
+    ``use_kernel=False`` it is the step-exact jnp oracle (no Pallas — the
+    CPU-safe default, same as the per-factor path).  The default iterates
+    per-factor applies.
+    """
+    if fuse:
+        return packed_chain_apply(
+            x, pack_chain(bfaust), use_kernel=use_kernel, bt=bt, interpret=interpret
+        )
     y = x
     for f in bfaust.factors:
         y = bsr_apply(y, f, use_kernel=use_kernel, bt=bt, interpret=interpret)
@@ -107,8 +242,12 @@ def blockfaust_apply_t(
 ) -> Array:
     """Adjoint chain apply ``y = lam · x @ (F_1···F_J)ᵀ`` (gradients / OMP).
 
-    Uses the scatter form per factor (the transpose of a packed factor is
-    not rectangular-packed in general).
+    Uses the scatter form per factor on every path — the transpose of a
+    packed factor is not rectangular-packed in general (a block column may
+    gather any number of blocks per block *row*), so ``use_kernel`` is
+    accepted for API symmetry but currently routes to the same scatter
+    einsum.  Covered by ``tests/test_adjoint.py`` against the dense and
+    ``Faust.apply_t`` oracles.
     """
     y = x
     for f in reversed(bfaust.factors):

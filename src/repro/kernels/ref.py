@@ -62,6 +62,43 @@ def bsr_matmul_dvalues(x: Array, dy: Array, in_idx: Array, block: tuple[int, int
     return jnp.einsum("...okb,...on->okbn", gathered, dyb)
 
 
+def _mask_tail(y: Array, ncols: int) -> Array:
+    """Zero columns ≥ ncols — the ragged-boundary semantics of the chain
+    (slice to the unpadded width, re-pad with zeros) without reshaping."""
+    if ncols == y.shape[-1]:
+        return y
+    cols = jnp.arange(y.shape[-1])
+    return jnp.where(cols < ncols, y, jnp.zeros((), y.dtype))
+
+
+def factor_slices(values: Array, in_idx: Array, plan, j: int):
+    """Slice factor ``j``'s packed ``(O, K, blk, blk)`` values / ``(O, K)``
+    index table back out of the flat chain arrays."""
+    blk = plan.block
+    o0, o1 = plan.offsets[j], plan.offsets[j + 1]
+    vj = values[o0:o1].reshape(plan.out_blocks[j], plan.k_blocks[j], blk, blk)
+    ij = in_idx[o0:o1].reshape(plan.out_blocks[j], plan.k_blocks[j])
+    return vj, ij
+
+
+def packed_chain_ref(x: Array, values: Array, in_idx: Array, plan) -> Array:
+    """Pure-jnp oracle for the fused chain kernel's exact step semantics.
+
+    ``values (S, blk, blk)`` / ``in_idx (S,)`` are the flat
+    :class:`repro.core.compress.PackedChain` arrays and ``plan`` its static
+    :class:`~repro.core.compress.ChainPlan`.  ``x``: (..., IB_1·blk),
+    already padded.  Returns (..., O_J·blk) with ragged tails zeroed —
+    identical (up to accumulation dtype) to
+    :func:`repro.kernels.chain.chain_matmul`.
+    """
+    y = x
+    for j in range(plan.n_factors):
+        vj, ij = factor_slices(values, in_idx, plan, j)
+        y = bsr_matmul_ref(y, vj, ij)
+        y = _mask_tail(y, plan.out_feats[j])
+    return y
+
+
 def blockfaust_apply_ref(x: Array, factors, lam: Array) -> Array:
     """Chain apply ``y = lam · (((x @ F_1) @ F_2) ...)`` with padding/slicing
     at the chain boundaries (pure-jnp oracle for the kernel chain)."""

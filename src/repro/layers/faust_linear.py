@@ -107,9 +107,21 @@ def faust_linear_apply(
     out_dim: int,
     *,
     use_kernel: bool = False,
+    fuse: bool = False,
 ) -> Array:
+    """Apply the FAµST projection.  ``fuse=True`` routes through the packed
+    chain (``repro.kernels.chain``) — always valid for ``FaustSpec`` chains
+    (uniform square blocks).  With ``use_kernel=True`` (TPU) that is the
+    fused single-``pallas_call`` kernel, which wins whenever the
+    intermediate activation traffic ``2·tokens·Σ_j d_j`` is a visible
+    fraction of the weight traffic ``s_tot``, i.e. small-batch inference;
+    with the CPU-safe default ``use_kernel=False`` it is the step-exact jnp
+    oracle of the same packed format."""
     return blockfaust_apply(
-        x, params_to_blockfaust(p, spec, in_dim, out_dim), use_kernel=use_kernel
+        x,
+        params_to_blockfaust(p, spec, in_dim, out_dim),
+        use_kernel=use_kernel,
+        fuse=fuse,
     )
 
 

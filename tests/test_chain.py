@@ -1,0 +1,229 @@
+"""Fused FAµST chain kernel (``kernels/chain.py``) vs its oracles.
+
+Coverage per the kernel contract:
+  * interpret-mode equality vs the step-exact jnp oracle
+    (``ref.packed_chain_ref``) and vs the per-factor ``blockfaust_apply``
+    across dtypes (f32 / bf16) and chain lengths J ∈ {1, 2, 4};
+  * ragged (padded) feature dims at the ends *and* at interior factor
+    boundaries;
+  * gradient check through the chain ``custom_vjp`` against autodiff of the
+    reference path;
+  * the launch-count claim: exactly one ``pallas_call`` per fused apply
+    (vs J on the per-factor path).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.compress import (
+    BlockFaust,
+    pack_chain,
+    pack_dense,
+    random_block_factor,
+)
+from repro.kernels import ref as R
+from repro.kernels.ops import blockfaust_apply, chain_meta, packed_chain_apply
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand_chain(seed, block_counts, blk=8, k=2, dtype=jnp.float32):
+    """Uniform-block chain with block-multiple feature dims."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(block_counts) - 1)
+    factors = tuple(
+        random_block_factor(
+            keys[i],
+            block_counts[i] * blk,
+            block_counts[i + 1] * blk,
+            blk,
+            blk,
+            min(k, block_counts[i]),
+            dtype=dtype,
+        )
+        for i in range(len(block_counts) - 1)
+    )
+    return BlockFaust(factors, jnp.asarray(1.3, dtype))
+
+
+@pytest.mark.parametrize("n_factors", [1, 2, 4])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_matches_ref_and_perfactor(n_factors, dtype):
+    counts = [4, 6, 3, 5, 4][: n_factors + 1]
+    bf = _rand_chain(n_factors, counts, dtype=dtype)
+    x = jax.random.normal(jax.random.PRNGKey(99), (9, counts[0] * 8), dtype=dtype)
+    want = blockfaust_apply(x, bf, use_kernel=False)
+    got_ref = blockfaust_apply(x, bf, fuse=True, use_kernel=False)
+    got_kern = blockfaust_apply(x, bf, fuse=True, use_kernel=True, bt=8, interpret=True)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    for got in (got_ref, got_kern):
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32),
+            np.asarray(want, np.float32),
+            rtol=tol,
+            atol=tol,
+        )
+
+
+@pytest.mark.parametrize("n_factors", [1, 2, 4])
+def test_fused_rel_frobenius_vs_dense(n_factors):
+    """Acceptance bound: ≤ 1e-5 rel-Frobenius vs the dense product."""
+    counts = [4, 6, 3, 5, 4][: n_factors + 1]
+    bf = _rand_chain(10 + n_factors, counts)
+    w = np.asarray(bf.todense())
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, counts[0] * 8))
+    got = np.asarray(
+        blockfaust_apply(x, bf, fuse=True, use_kernel=True, bt=8, interpret=True)
+    )
+    want = np.asarray(x) @ w
+    rel = np.linalg.norm(got - want) / np.linalg.norm(want)
+    assert rel <= 1e-5, rel
+
+
+def test_fused_ragged_feature_dims():
+    """Non-block-multiple dims at the ends and at an interior boundary."""
+    rng = np.random.default_rng(0)
+    w1 = jnp.asarray(rng.normal(size=(20, 30)).astype(np.float32))
+    w2 = jnp.asarray(rng.normal(size=(30, 13)).astype(np.float32))
+    bf = BlockFaust(
+        (pack_dense(w1, 8, 8, 4), pack_dense(w2, 8, 8, 4)),
+        jnp.asarray(0.9, jnp.float32),
+    )
+    x = jnp.asarray(rng.normal(size=(5, 20)).astype(np.float32))
+    want = blockfaust_apply(x, bf, use_kernel=False)
+    got = blockfaust_apply(x, bf, fuse=True, use_kernel=True, bt=8, interpret=True)
+    assert got.shape == (5, 13)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+    # and against the dense product
+    dense = np.asarray(x) @ np.asarray(bf.todense())
+    np.testing.assert_allclose(np.asarray(got), dense, rtol=1e-4, atol=1e-5)
+
+
+def test_fused_ragged_random_factors_match_perfactor():
+    """random_block_factor puts *nonzero* values in padded tail columns; the
+    fused kernel must mask them exactly like the per-factor slice-then-pad."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(5))
+    f1 = random_block_factor(k1, 20, 27, 8, 8, 2)
+    f2 = random_block_factor(k2, 27, 19, 8, 8, 3)
+    bf = BlockFaust((f1, f2), jnp.asarray(1.1, jnp.float32))
+    x = jax.random.normal(jax.random.PRNGKey(6), (7, 20))
+    want = blockfaust_apply(x, bf, use_kernel=False)
+    got = blockfaust_apply(x, bf, fuse=True, use_kernel=True, bt=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_fused_leading_batch_dims_and_batch_padding():
+    bf = _rand_chain(3, [4, 5, 4])
+    x = jax.random.normal(jax.random.PRNGKey(7), (2, 3, 32))  # 6 rows, bt=8
+    want = blockfaust_apply(x, bf, use_kernel=False)
+    got = blockfaust_apply(x, bf, fuse=True, use_kernel=True, bt=8, interpret=True)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_fused_grads_match_ref_grads():
+    """custom_vjp chain backward == autodiff of the per-factor reference."""
+    bf = _rand_chain(4, [4, 6, 4], k=3)
+    chain = pack_chain(bf)
+    x = jax.random.normal(jax.random.PRNGKey(8), (8, 32))
+    dy_seed = jax.random.normal(jax.random.PRNGKey(9), (8, 32))
+
+    def loss(x, values, *, use_kernel):
+        pc = dataclasses.replace(chain, values=values)
+        y = packed_chain_apply(x, pc, use_kernel=use_kernel, bt=8, interpret=True)
+        return jnp.sum(y * dy_seed)
+
+    gx_k, gv_k = jax.grad(lambda a, b: loss(a, b, use_kernel=True), (0, 1))(
+        x, chain.values
+    )
+    gx_r, gv_r = jax.grad(lambda a, b: loss(a, b, use_kernel=False), (0, 1))(
+        x, chain.values
+    )
+    np.testing.assert_allclose(np.asarray(gx_k), np.asarray(gx_r), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gv_k), np.asarray(gv_r), rtol=1e-4, atol=1e-5)
+
+
+def test_fused_grads_ragged_chain():
+    """Backward masking at ragged boundaries matches ref autodiff."""
+    rng = np.random.default_rng(2)
+    w1 = jnp.asarray(rng.normal(size=(20, 30)).astype(np.float32))
+    w2 = jnp.asarray(rng.normal(size=(30, 13)).astype(np.float32))
+    bf = BlockFaust(
+        (pack_dense(w1, 8, 8, 4), pack_dense(w2, 8, 8, 4)),
+        jnp.asarray(1.0, jnp.float32),
+    )
+    chain = pack_chain(bf)
+    x = jnp.asarray(rng.normal(size=(4, 20)).astype(np.float32))
+
+    def loss(x, values, *, use_kernel):
+        pc = dataclasses.replace(chain, values=values)
+        y = packed_chain_apply(x, pc, use_kernel=use_kernel, bt=8, interpret=True)
+        return jnp.sum(y**2)
+
+    gx_k, gv_k = jax.grad(lambda a, b: loss(a, b, use_kernel=True), (0, 1))(
+        x, chain.values
+    )
+    gx_r, gv_r = jax.grad(lambda a, b: loss(a, b, use_kernel=False), (0, 1))(
+        x, chain.values
+    )
+    # the quadratic loss feeds the forward's f32 accumulation-order noise
+    # back through dy = 2y, so tolerance is looser than the linear-loss check
+    np.testing.assert_allclose(np.asarray(gx_k), np.asarray(gx_r), rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gv_k), np.asarray(gv_r), rtol=1e-3, atol=1e-4)
+
+
+def test_fused_single_pallas_call():
+    """One launch for the whole chain; the per-factor path stages J."""
+    bf = _rand_chain(11, [4, 4, 4, 4])  # J = 3
+    chain = pack_chain(bf)
+    x = jax.random.normal(jax.random.PRNGKey(12), (8, 32))
+
+    fused = lambda v: packed_chain_apply(v, chain, use_kernel=True, bt=8, interpret=True)
+    perfac = lambda v: blockfaust_apply(v, bf, use_kernel=True, bt=8, interpret=True)
+    assert str(jax.make_jaxpr(fused)(x)).count("pallas_call") == 1
+    assert str(jax.make_jaxpr(perfac)(x)).count("pallas_call") == 3
+
+
+def test_pack_chain_rejects_nonuniform_blocks():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(13))
+    f1 = random_block_factor(k1, 32, 32, 8, 8, 2)
+    f2 = random_block_factor(k2, 32, 32, 16, 16, 2)
+    bf = BlockFaust((f1, f2), jnp.asarray(1.0, jnp.float32))
+    with pytest.raises(ValueError, match="uniform square blocks"):
+        pack_chain(bf)
+
+
+def test_pack_chain_rejects_discontiguous_chain():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(14))
+    f1 = random_block_factor(k1, 32, 40, 8, 8, 2)
+    f2 = random_block_factor(k2, 32, 32, 8, 8, 2)  # in ≠ previous out
+    bf = BlockFaust((f1, f2), jnp.asarray(1.0, jnp.float32))
+    with pytest.raises(ValueError, match="contiguous"):
+        pack_chain(bf)
+
+
+def test_chain_meta_layout():
+    """The step table drives the kernel — pin its invariants."""
+    bf = _rand_chain(15, [3, 4, 2], k=2)
+    chain = pack_chain(bf)
+    plan = chain.plan
+    meta = np.asarray(chain_meta(plan, chain.in_idx))
+    assert meta.shape == (plan.n_steps, 7)
+    # column 0 is the flat in_idx
+    np.testing.assert_array_equal(meta[:, 0], np.asarray(chain.in_idx))
+    # each factor's steps: parity j%2, k0/kend framing, contiguous o runs
+    for j in range(plan.n_factors):
+        rows = meta[plan.offsets[j] : plan.offsets[j + 1]]
+        o_count, k_count = plan.out_blocks[j], plan.k_blocks[j]
+        assert rows.shape[0] == o_count * k_count
+        np.testing.assert_array_equal(rows[:, 2], j % 2)
+        np.testing.assert_array_equal(rows[:, 1], np.repeat(np.arange(o_count), k_count))
+        np.testing.assert_array_equal(rows[:, 3], np.tile(np.arange(k_count) == 0, o_count))
+        np.testing.assert_array_equal(
+            rows[:, 4], np.tile(np.arange(k_count) == k_count - 1, o_count)
+        )
+        np.testing.assert_array_equal(rows[:, 5], int(j == plan.n_factors - 1))
+    # every accumulation group closes exactly once per output block
+    assert meta[:, 4].sum() == sum(plan.out_blocks)

@@ -1,10 +1,9 @@
-"""Projection operators (paper Appendix A) — oracle + property tests."""
+"""Projection operators (paper Appendix A) — oracle + seeded random sweeps
+(ex-hypothesis property tests, rewritten to run on bare ``jax+pytest``)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.core import projections as P
 
@@ -110,15 +109,12 @@ def test_piecewise_const_projection():
     np.testing.assert_array_equal(nz_rows, [2, 3])
 
 
-@settings(max_examples=25, deadline=None)
-@given(
-    m=st.integers(2, 12),
-    n=st.integers(2, 12),
-    k=st.integers(1, 40),
-    seed=st.integers(0, 2**31 - 1),
-)
-def test_property_global_topk_idempotent_and_unit_norm(m, n, k, seed):
+@pytest.mark.parametrize("seed", range(25))
+def test_random_sweep_global_topk_idempotent_and_unit_norm(seed):
     rng = np.random.default_rng(seed)
+    m = int(rng.integers(2, 13))
+    n = int(rng.integers(2, 13))
+    k = int(rng.integers(1, 41))
     x = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
     once = P.proj_global_topk(x, k)
     twice = P.proj_global_topk(once, k)
@@ -128,16 +124,13 @@ def test_property_global_topk_idempotent_and_unit_norm(m, n, k, seed):
     assert int((np.asarray(once) != 0).sum()) <= k
 
 
-@settings(max_examples=25, deadline=None)
-@given(
-    rb=st.integers(1, 4),
-    cb=st.integers(1, 4),
-    k=st.integers(1, 4),
-    seed=st.integers(0, 2**31 - 1),
-)
-def test_property_blockrow_projection_nonexpansive(rb, cb, k, seed):
+@pytest.mark.parametrize("seed", range(25))
+def test_random_sweep_blockrow_projection_nonexpansive(seed):
     """Projections onto closed sets through the origin shrink norm."""
     rng = np.random.default_rng(seed)
+    rb = int(rng.integers(1, 5))
+    cb = int(rng.integers(1, 5))
+    k = int(rng.integers(1, 5))
     x = jnp.asarray(rng.normal(size=(rb * 4, cb * 4)).astype(np.float32))
     out = P.proj_blockrow_topk(x, 4, 4, k_per_row=min(k, cb), normalize=False)
     assert float(jnp.linalg.norm(out)) <= float(jnp.linalg.norm(x)) + 1e-5

@@ -22,9 +22,43 @@ def timeit_us(fn, *args, n_warmup: int = 2, n_iter: int = 10) -> float:
     return float(np.median(times) * 1e6)
 
 
+_ROWS: list[dict] = []
+
+
 def emit(name: str, us_per_call: float, derived: str) -> None:
-    """CSV row: name,us_per_call,derived."""
+    """CSV row: name,us_per_call,derived.  Rows are also recorded for the
+    runner's ``--json`` machine-readable output (see :func:`rows`)."""
     print(f"{name},{us_per_call:.1f},{derived}")
+    _ROWS.append(
+        {
+            "name": name,
+            "us_per_call": round(us_per_call, 1),
+            "derived": _parse_derived(derived),
+        }
+    )
+
+
+def _parse_derived(derived: str) -> dict:
+    """``k=v;k=v`` → dict, values parsed as floats where possible."""
+    out: dict = {}
+    for item in derived.split(";"):
+        if "=" not in item:
+            continue
+        k, v = item.split("=", 1)
+        try:
+            out[k] = float(v)
+        except ValueError:
+            out[k] = v
+    return out
+
+
+def reset_rows() -> None:
+    _ROWS.clear()
+
+
+def rows() -> list[dict]:
+    """All emit() rows since the last reset, as JSON-ready dicts."""
+    return list(_ROWS)
 
 
 def synthetic_leadfield(

@@ -1,7 +1,12 @@
 """Benchmark runner — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks that are
-accuracy-only report us_per_call=0.0).
+accuracy-only report us_per_call=0.0).  With ``--json PATH`` the same rows
+are also written as machine-readable JSON (derived ``k=v`` pairs parsed
+into a dict) so the perf trajectory can be tracked across PRs, e.g.::
+
+    PYTHONPATH=src:. python benchmarks/run.py --only apply_speed \
+        --json BENCH_apply.json
 
   hadamard            — §IV-C, Figs. 1/6 (exact reverse-engineering + ablation)
   meg_tradeoff        — §V-A, Figs. 7/8 (RE vs RCG sweep)
@@ -9,10 +14,14 @@ accuracy-only report us_per_call=0.0).
   source_localization — §V-B, Fig. 9 (OMP with FAµST operators)
   denoising           — §VI-C, Fig. 12 (FAµST dictionaries vs DDL)
   apply_speed         — §II-B2 (RCG flop model, measured + TPU roofline)
+  batch_compress      — §II-B amortization at workload scale (batched vs
+                        sequential factorization; EXPERIMENTS.md §Batched
+                        compression)
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -21,10 +30,18 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma-separated benchmark names")
+    ap.add_argument(
+        "--json",
+        default=None,
+        metavar="PATH",
+        help="also write the emitted rows as machine-readable JSON",
+    )
     args = ap.parse_args()
 
     from benchmarks import (
         apply_speed,
+        batch_compress,
+        common,
         denoising,
         hadamard,
         meg_tradeoff,
@@ -39,9 +56,11 @@ def main() -> None:
         "source_localization": source_localization.run,
         "denoising": denoising.run,
         "apply_speed": apply_speed.run,
+        "batch_compress": batch_compress.run,
     }
     names = args.only.split(",") if args.only else list(table)
     print("name,us_per_call,derived")
+    common.reset_rows()
     failed = []
     for name in names:
         t0 = time.monotonic()
@@ -51,6 +70,11 @@ def main() -> None:
         except Exception:
             failed.append(name)
             traceback.print_exc()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(common.rows(), f, indent=2)
+            f.write("\n")
+        print(f"# wrote {len(common.rows())} rows to {args.json}", file=sys.stderr)
     if failed:
         print(f"# FAILED: {failed}", file=sys.stderr)
         raise SystemExit(1)

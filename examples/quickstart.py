@@ -5,6 +5,9 @@
 2. Factorize an MEG-like operator at a chosen accuracy/complexity
    trade-off (paper §V-A).
 3. Pack it into the deployment BlockFaust and apply it to vectors.
+4. Compress a whole stack of same-shaped weights in one batched solve
+   (one compile amortized across the stack — EXPERIMENTS.md §Batched
+   compression).
 
 Run: PYTHONPATH=src:. python examples/quickstart.py
 """
@@ -15,6 +18,7 @@ import numpy as np
 from benchmarks.common import synthetic_leadfield
 from repro.core import (
     compress_matrix,
+    compress_matrix_batched,
     hadamard_matrix,
     hadamard_spec,
     hierarchical_factorization,
@@ -47,6 +51,19 @@ def main() -> None:
     y = blockfaust_apply(x, bf)
     err = float(jnp.linalg.norm(y - x @ bf.todense()) / jnp.linalg.norm(y))
     print(f"BlockFaust 128→256: RCG={bf.rcg():.2f}, packed-apply err={err:.2e}")
+
+    # --- 4. batched: a stack of same-shaped weights, one compile ------------
+    ws = jax.random.normal(jax.random.PRNGKey(2), (4, 128, 256)) * 0.05
+    bfs, _, info = compress_matrix_batched(
+        ws, n_factors=2, bk=16, bn=16, k_first=4, k_mid=4,
+        n_iter_two=20, n_iter_global=20,
+    )
+    res = [
+        float(jnp.linalg.norm(bfs[i].todense() - ws[i]) / jnp.linalg.norm(ws[i]))
+        for i in range(len(bfs))
+    ]
+    print(f"batched compress 4×(128→256): traces={info.cache.misses} "
+          f"(hits={info.cache.hits}), RE={np.mean(res):.3f}±{np.std(res):.3f}")
 
 
 if __name__ == "__main__":

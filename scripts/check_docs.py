@@ -1,0 +1,93 @@
+#!/usr/bin/env python
+"""Docs-reference checker (run by scripts/ci.sh).
+
+Verifies the documentation layer the code cites actually resolves:
+
+* every ``EXPERIMENTS.md §<section>`` citation anywhere in the tree names
+  a heading that exists in EXPERIMENTS.md;
+* every bare ``EXPERIMENTS.md`` / ``README.md`` / ``ROADMAP.md`` file
+  reference in the source tree points at an existing file.
+
+Exits non-zero listing unresolved citations.  Pure stdlib so it runs
+before any heavy import.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# task-driver files whose citations describe work, not code contracts
+SKIP_FILES = {"ISSUE.md", "CHANGES.md"}
+SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", "experiments"}
+EXTS = {".py", ".md", ".sh", ".txt", ".toml", ".ini", ".cfg"}
+
+SECTION_RE = re.compile(
+    r"EXPERIMENTS\.md\s+§([A-Za-z0-9][A-Za-z0-9 \-]*?)(?=[\)\].,;:`'\"\n]|$)"
+)
+FILE_REF_RE = re.compile(r"\b(EXPERIMENTS\.md|README\.md|ROADMAP\.md)\b")
+HEADING_RE = re.compile(r"^#{1,6}\s+§?(.+?)\s*$", re.MULTILINE)
+
+
+def iter_files():
+    for dirpath, dirnames, filenames in os.walk(ROOT):
+        dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+        for fn in filenames:
+            if fn in SKIP_FILES or os.path.splitext(fn)[1] not in EXTS:
+                continue
+            yield os.path.join(dirpath, fn)
+
+
+def main() -> int:
+    exp_path = os.path.join(ROOT, "EXPERIMENTS.md")
+    headings: list[str] = []
+    if os.path.exists(exp_path):
+        with open(exp_path, encoding="utf-8") as f:
+            headings = [m.strip() for m in HEADING_RE.findall(f.read())]
+
+    errors: list[str] = []
+    n_citations = 0
+    for path in iter_files():
+        rel = os.path.relpath(path, ROOT)
+        try:
+            with open(path, encoding="utf-8") as f:
+                text = f.read()
+        except (UnicodeDecodeError, OSError):
+            continue
+        for ref in set(FILE_REF_RE.findall(text)):
+            if rel == ref:
+                continue  # a file naming itself is not a reference
+            if not os.path.exists(os.path.join(ROOT, ref)):
+                errors.append(f"{rel}: references missing file {ref}")
+        for m in SECTION_RE.finditer(text):
+            n_citations += 1
+            section = m.group(1).strip()
+            # A citation resolves when some heading matches it exactly,
+            # extends it (headings may carry a descriptive "— …" suffix), or
+            # is a prefix of it (the regex may over-capture trailing prose
+            # from an inline citation like "§Foo shows a win").
+            resolved = any(
+                h == section or h.startswith(section) or section.startswith(h)
+                for h in headings
+            )
+            if not os.path.exists(exp_path):
+                errors.append(f"{rel}: cites EXPERIMENTS.md §{section} but the file is missing")
+            elif not resolved:
+                errors.append(f"{rel}: unresolved citation EXPERIMENTS.md §{section}")
+
+    if errors:
+        print("check_docs: FAILED")
+        for e in sorted(set(errors)):
+            print(f"  {e}")
+        return 1
+    print(
+        f"check_docs: OK ({n_citations} section citations resolved against "
+        f"{len(headings)} headings)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

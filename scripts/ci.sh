@@ -17,6 +17,13 @@ SEED_PASSED=0
 SEED_FAILED=0
 SEED_ERRORS=2
 
+# Docs check first (cheap): every EXPERIMENTS.md §…/README reference in the
+# tree must resolve to an existing file/heading.
+if ! python scripts/check_docs.py; then
+    echo "ci: DOCS CHECK FAILED"
+    exit 1
+fi
+
 out=$(PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout "$CI_TIMEOUT" \
       python -m pytest -q tests 2>&1)
 status=$?

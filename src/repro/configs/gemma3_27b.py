@@ -6,7 +6,7 @@ vocab=262144, qk-norm, sliding window 1024 on local layers, distinct rope
 bases (10k local / 1M global). Majority-sliding-window → runs long_500k.
 
 The 262144×5376 unembedding is the framework's flagship FAµST target
-(see EXPERIMENTS.md §Perf hillclimb #3).
+(see EXPERIMENTS.md §Perf iteration 3).
 """
 import dataclasses
 

@@ -3,29 +3,48 @@
 from repro.core.compress import (
     BlockFaust,
     BlockSparseFactor,
+    compress_layers,
     compress_matrix,
+    compress_matrix_batched,
+    compress_model,
     pack_dense,
     random_block_factor,
 )
 from repro.core.faust import Faust, default_init, dense_flops, faust_flops
 from repro.core.hierarchical import (
+    CacheStats,
+    HierarchicalInfo,
     HierarchicalSpec,
     hadamard_matrix,
     hadamard_spec,
     hierarchical_dictionary,
     hierarchical_factorization,
+    hierarchical_factorization_batched,
     meg_style_spec,
+    reset_trace_cache,
+    trace_cache_stats,
 )
-from repro.core.lipschitz import spectral_norm
-from repro.core.palm4msa import PalmResult, palm4msa, palm4msa_faust, product
+from repro.core.lipschitz import spectral_norm, spectral_norm_batched
+from repro.core.palm4msa import (
+    PalmResult,
+    palm4msa,
+    palm4msa_batched,
+    palm4msa_faust,
+    product,
+)
 
 __all__ = [
     "BlockFaust",
     "BlockSparseFactor",
+    "CacheStats",
     "Faust",
+    "HierarchicalInfo",
     "HierarchicalSpec",
     "PalmResult",
+    "compress_layers",
     "compress_matrix",
+    "compress_matrix_batched",
+    "compress_model",
     "default_init",
     "dense_flops",
     "faust_flops",
@@ -33,11 +52,16 @@ __all__ = [
     "hadamard_spec",
     "hierarchical_dictionary",
     "hierarchical_factorization",
+    "hierarchical_factorization_batched",
     "meg_style_spec",
     "pack_dense",
     "palm4msa",
+    "palm4msa_batched",
     "palm4msa_faust",
     "product",
     "random_block_factor",
+    "reset_trace_cache",
     "spectral_norm",
+    "spectral_norm_batched",
+    "trace_cache_stats",
 ]

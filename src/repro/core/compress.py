@@ -19,11 +19,20 @@ output block — the TPU-friendly shape (DESIGN.md §3).
 paper's hierarchical algorithm using block-granular constraint sets; random
 prescribed-support initialization (for training FAµSTs from scratch) lives
 here too.
+
+Workload-scale compression (EXPERIMENTS.md §Batched compression):
+``compress_matrix_batched`` solves a stack of same-shaped weights with the
+batched PALM4MSA engine (one compile, one dispatch per hierarchical step);
+``compress_layers`` buckets a named weight collection by shape and batches
+each bucket (optionally sharded over a mesh axis); ``compress_model`` walks
+a ``configs/``-built model's parameter pytree and feeds every eligible 2-D
+weight through that pipeline, returning per-layer :class:`BlockFaust` chains
+ready for :func:`pack_chain` + the ``faust_linear`` serving path.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +40,12 @@ import numpy as np
 
 from repro.core import projections as P
 from repro.core.faust import Faust
-from repro.core.hierarchical import HierarchicalSpec, hierarchical_factorization
+from repro.core.hierarchical import (
+    HierarchicalInfo,
+    HierarchicalSpec,
+    hierarchical_factorization,
+    hierarchical_factorization_batched,
+)
 
 Array = jax.Array
 
@@ -140,12 +154,27 @@ class BlockFaust:
 class ChainPlan:
     """Static (hashable) metadata for a flat-packed FAµST chain.
 
-    The fused kernel enumerates one *step* per stored block, in
-    ``(factor j, output block o, gathered slot k)`` lexicographic order, so
-    step ``s`` of the flat arrays is block ``(j, o, k)`` with
-    ``s = offsets[j] + o·k_blocks[j] + k``.  Everything here is a Python
-    int/tuple: the plan travels as a pytree aux / ``nondiff_argnums`` value
-    and never enters the traced graph.
+    The fused kernel (``repro.kernels.chain``) enumerates one *step* per
+    stored block, in ``(factor j, output block o, gathered slot k)``
+    lexicographic order, so step ``s`` of the flat arrays is block
+    ``(j, o, k)`` with ``s = offsets[j] + o·k_blocks[j] + k``::
+
+        step s:   0        1        2        3       off[1]    …      S-1
+                ┌────────┬────────┬────────┬────────╥────────┬─────┬────────┐
+        values  │  j=0   │  j=0   │  j=0   │  j=0   ║  j=1   │  …  │ j=J-1  │
+        (S,b,b) │ o=0 k=0│ o=0 k=1│ o=1 k=0│ o=1 k=1║ o=0 k=0│     │o=O-1   │
+                └────────┴────────┴────────┴────────╨────────┴─────┴────────┘
+                ╰── factor 0: O_0·K_0 blocks, offsets[0] = 0 ──╯
+                                                    ╰── factor 1 starts at
+                                                        offsets[1] = O_0·K_0
+
+    (here factor 0 has O_0 = 2 output blocks gathering K_0 = 2 slots each).
+    ``in_idx[s]`` names the input block of the *current* activation that
+    step ``s`` multiplies; offsets make the factor boundaries recoverable
+    without per-step factor ids.  Everything here is a Python int/tuple:
+    the plan travels as a pytree aux / ``nondiff_argnums`` value and never
+    enters the traced graph — two chains with equal plans share one kernel
+    specialization.
     """
 
     block: int  # uniform square block side (bk == bn for every factor)
@@ -189,8 +218,10 @@ class PackedChain:
         in_idx : (S,) int32         — input block id within the *current*
                                       activation for each step
 
-    The static layout lives in :class:`ChainPlan` (pytree aux), so a
-    ``PackedChain`` jits/vmaps like any array pytree.
+    See the :class:`ChainPlan` docstring for the ASCII diagram of the
+    ``(factor, out-block, slot)`` step ordering and the ``offsets``
+    metadata that delimits factors.  The static layout lives in the plan
+    (pytree aux), so a ``PackedChain`` jits/vmaps like any array pytree.
     """
 
     values: Array  # (S, block, block)
@@ -350,9 +381,32 @@ def compress_matrix(
     wp = _pad_to_multiple(w, bk, bn)
     transpose = wp.shape[1] < wp.shape[0]  # out < in
     a = wp.T if transpose else wp  # (m, n) with m ≤ n
-    m, n = a.shape
-    mb = m // bk  # residuals are (m, m): mb × mb blocks
+    spec = _compress_spec(
+        a.shape, transpose, n_factors, bk, bn, k_first, k_mid, k_resid,
+        n_iter_two, n_iter_global,
+    )
+    faust, _ = hierarchical_factorization(a, spec)
+    bfaust = _faust_to_blockfaust(faust, transpose, bk, bn, in_f, out_f)
+    return bfaust, faust
 
+
+def _compress_spec(
+    a_shape: tuple[int, int],
+    transpose: bool,
+    n_factors: int,
+    bk: int,
+    bn: int,
+    k_first: int,
+    k_mid: int,
+    k_resid: Sequence[int] | None,
+    n_iter_two: int,
+    n_iter_global: int,
+) -> HierarchicalSpec:
+    """The §V-A-style block-granular constraint schedule for one (padded,
+    oriented) matrix shape — shared by the single and batched pipelines, so
+    same-shaped compressions land in the same palm4msa trace bucket."""
+    m, n = a_shape
+    mb = m // bk  # residuals are (m, m): mb × mb blocks
     if k_resid is None:
         rho = 0.7
         k_resid = [
@@ -371,19 +425,24 @@ def compress_matrix(
         resid_projs.append(
             P.make_proj(kind, bm=bk, bn=bn, **{key: int(k_resid[ell - 1])})
         )
-    spec = HierarchicalSpec(
+    return HierarchicalSpec(
         tuple(factor_projs),
         tuple(resid_projs),
         (m,) * (n_factors - 1),
         n_iter_two=n_iter_two,
         n_iter_global=n_iter_global,
     )
-    faust, _ = hierarchical_factorization(a, spec)
 
-    # Map A = S_J ... S_1 to the right-multiply chain on the padded W:
-    #   transpose=True : Wp = Aᵀ = S_1ᵀ S_2ᵀ ... S_Jᵀ → F_i = S_iᵀ
-    #   transpose=False: Wp = A = S_J ... S_1 and x@Wp = ((x@S_J)···)@S_1
-    #                    → F_i = S_{J+1-i}
+
+def _faust_to_blockfaust(
+    faust: Faust, transpose: bool, bk: int, bn: int, in_f: int, out_f: int
+) -> BlockFaust:
+    """Map A = S_J ... S_1 to the right-multiply packed chain on the padded W:
+
+      transpose=True : Wp = Aᵀ = S_1ᵀ S_2ᵀ ... S_Jᵀ → F_i = S_iᵀ
+      transpose=False: Wp = A = S_J ... S_1 and x@Wp = ((x@S_J)···)@S_1
+                       → F_i = S_{J+1-i}
+    """
     if transpose:
         dense_chain = [s.T for s in faust.factors]
     else:
@@ -398,7 +457,7 @@ def compress_matrix(
     # restore unpadded feature sizes at the chain ends
     packed[0] = dataclasses.replace(packed[0], in_features=in_f)
     packed[-1] = dataclasses.replace(packed[-1], out_features=out_f)
-    return BlockFaust(tuple(packed), faust.lam), faust
+    return BlockFaust(tuple(packed), faust.lam)
 
 
 def _max_blocks_per_outcol(f: Array, bk: int, bn: int) -> int:
@@ -407,3 +466,175 @@ def _max_blocks_per_outcol(f: Array, bk: int, bn: int) -> int:
     blocks = fp.reshape(ib, bk, ob, bn).transpose(2, 0, 1, 3)
     energy = np.asarray(jnp.sum(blocks**2, axis=(-1, -2)))  # (O, I)
     return int(max((energy > 0).sum(axis=1).max(), 1))
+
+
+# ---------------------------------------------------------------------------
+# Batched compression — amortize one compile across a stack of weights
+# ---------------------------------------------------------------------------
+
+
+def compress_matrix_batched(
+    ws: Array,
+    n_factors: int,
+    bk: int,
+    bn: int,
+    k_first: int,
+    k_mid: int,
+    k_resid: Sequence[int] | None = None,
+    n_iter_two: int = 40,
+    n_iter_global: int = 40,
+) -> tuple[list[BlockFaust], list[Faust], HierarchicalInfo]:
+    """:func:`compress_matrix` over a stack ``ws (B, in, out)`` of same-shaped
+    weights, solved by the batched hierarchical engine: every (split, refine)
+    step is one ``palm4msa_batched`` call for the whole stack, so the XLA
+    compile cost is paid once regardless of B and the solves run as batched
+    matmuls instead of B sequential dispatches.
+
+    Per-matrix outputs match ``compress_matrix(ws[i], ...)`` to fp tolerance
+    (the batched sweep is the vmapped sequential sweep; RE parity ≤ 1e-5 is
+    asserted by ``benchmarks/batch_compress.py``).  Returns per-matrix
+    :class:`BlockFaust`/:class:`Faust` lists plus the run's
+    :class:`~repro.core.hierarchical.HierarchicalInfo` (trace-cache
+    counters).
+    """
+    assert bk == bn, "compress_matrix_batched requires square blocks"
+    assert ws.ndim == 3, f"expected (B, in, out); got {ws.shape}"
+    in_f, out_f = ws.shape[1:]
+    pi, po = (-in_f) % bk, (-out_f) % bn
+    wp = jnp.pad(ws, ((0, 0), (0, pi), (0, po))) if (pi or po) else ws
+    transpose = wp.shape[2] < wp.shape[1]  # out < in
+    a = jnp.swapaxes(wp, 1, 2) if transpose else wp  # (B, m, n), m ≤ n
+    spec = _compress_spec(
+        a.shape[1:], transpose, n_factors, bk, bn, k_first, k_mid, k_resid,
+        n_iter_two, n_iter_global,
+    )
+    fausts, info = hierarchical_factorization_batched(a, spec)
+    bfausts = [
+        _faust_to_blockfaust(f, transpose, bk, bn, in_f, out_f) for f in fausts
+    ]
+    return bfausts, fausts, info
+
+
+def _maybe_shard_batch(stack: Array, mesh, batch_axis: str) -> Array:
+    """Shard a stack's leading (batch) dim over ``batch_axis`` when the mesh
+    has that axis and it divides the batch evenly; otherwise leave default
+    placement (an uneven bucket — e.g. 6 layers over 8 devices — or a mesh
+    without the axis must not turn into a device_put error)."""
+    if (
+        mesh is not None
+        and batch_axis in mesh.shape
+        and stack.shape[0] % mesh.shape[batch_axis] == 0
+    ):
+        sharding = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec(batch_axis)
+        )
+        stack = jax.device_put(stack, sharding)
+    return stack
+
+
+_DEFAULT_BLOCK = 128  # TPU-native block side (DESIGN.md §3)
+
+
+def compress_layers(
+    weights: dict[str, Array],
+    n_factors: int = 2,
+    bk: int = _DEFAULT_BLOCK,
+    bn: int = _DEFAULT_BLOCK,
+    k_first: int = 4,
+    k_mid: int = 4,
+    k_resid: Sequence[int] | None = None,
+    n_iter_two: int = 40,
+    n_iter_global: int = 40,
+    mesh=None,
+    batch_axis: str = "data",
+) -> dict[str, BlockFaust]:
+    """Compress a named collection of dense weights into per-layer
+    :class:`BlockFaust` chains, batching same-shaped weights.
+
+    A value may be a single 2-D weight or a 3-D ``(L, in, out)`` scan stack
+    (the ``models.lm`` per-layer kernel layout): stacks go to the batched
+    solver *as-is* — no unstack/restack copy — and expand to ``name[i]``
+    entries in the result.  2-D weights are bucketed by ``(shape, dtype)``;
+    each bucket of size > 1 is stacked and solved by
+    :func:`compress_matrix_batched` (one compile + one batched solve per
+    bucket), singletons fall back to :func:`compress_matrix` — which still
+    reuses traces across buckets of equal shape thanks to the
+    value-hashable projection specs.
+
+    ``mesh``: optional ``jax.sharding.Mesh``; when given, each stack is
+    placed with its batch dimension sharded over ``batch_axis`` (when that
+    axis exists and divides the batch), so the batched solver's matmuls run
+    under the mesh — each device owns a slice of the stack, the
+    layer-parallel compression mode.
+
+    The returned dict maps each input name to a :class:`BlockFaust` ready
+    for :func:`pack_chain` /
+    ``repro.layers.faust_linear.blockfaust_to_params``.
+    """
+    kw = dict(
+        n_factors=n_factors, bk=bk, bn=bn, k_first=k_first, k_mid=k_mid,
+        k_resid=k_resid, n_iter_two=n_iter_two, n_iter_global=n_iter_global,
+    )
+    out: dict[str, BlockFaust] = {}
+    buckets: dict[tuple, list[str]] = {}
+    for name, w in sorted(weights.items()):
+        if w.ndim == 3:  # pre-stacked (L, in, out): already the batch layout
+            stack = _maybe_shard_batch(w, mesh, batch_axis)
+            bfausts, _, _ = compress_matrix_batched(stack, **kw)
+            out.update((f"{name}[{i}]", bf) for i, bf in enumerate(bfausts))
+            continue
+        assert w.ndim == 2, f"{name}: expected a 2-D or (L, in, out) weight, got {w.shape}"
+        buckets.setdefault((tuple(w.shape), str(w.dtype)), []).append(name)
+
+    for _, names in sorted(buckets.items(), key=lambda kv: kv[1][0]):
+        if len(names) == 1:
+            out[names[0]], _ = compress_matrix(weights[names[0]], **kw)
+            continue
+        stack = _maybe_shard_batch(
+            jnp.stack([weights[n] for n in names]), mesh, batch_axis
+        )
+        bfausts, _, _ = compress_matrix_batched(stack, **kw)
+        out.update(zip(names, bfausts))
+    return out
+
+
+def compress_model(
+    params,
+    min_dim: int | None = None,
+    select: "Callable[[str], bool] | None" = None,
+    **kw,
+) -> dict[str, BlockFaust]:
+    """Gather every eligible 2-D weight from a ``configs/``-built model's
+    parameter pytree and compress them with :func:`compress_layers`.
+
+    ``params`` is any pytree (plain dicts or the ``Annotated`` trees built
+    by ``repro.models.lm.init_model``); leaves are addressed by their
+    ``jax.tree_util`` key path string.  Eligible leaves are 2-D weights
+    with both dims ≥ ``min_dim`` (default: the block size, so at least one
+    block fits per side), plus 3-D ``(L, in, out)`` *scan-stacked* layer
+    weights — the layout ``models.lm`` uses for its per-layer kernels —
+    which pass straight through as ready-made batches (the result carries
+    per-layer entries ``path[i]``); every transformer block's stacked
+    QKV/MLP kernels land in a single batched solve, which is where the
+    amortization pays off at model scale.  ``select`` further filters by
+    path name (e.g. ``lambda n: "mlp" in n``).
+
+    Returns ``{path: BlockFaust}`` ready for ``pack_chain`` + the
+    ``faust_linear`` serving path.
+    """
+    bk = kw.get("bk", _DEFAULT_BLOCK)
+    if min_dim is None:
+        min_dim = bk
+    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    weights: dict[str, Array] = {}
+    for path, leaf in leaves:
+        if not hasattr(leaf, "ndim") or leaf.ndim not in (2, 3):
+            continue
+        if min(leaf.shape[-2:]) < min_dim:
+            continue
+        name = jax.tree_util.keystr(path)
+        if select is not None and not select(name):
+            continue
+        weights[name] = leaf  # 3-D stacks stay stacked; compress_layers
+        # handles both ranks
+    return compress_layers(weights, **kw)

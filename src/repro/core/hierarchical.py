@@ -9,6 +9,20 @@ paper draws in §IV-A.
 This module is host-side orchestration (Python loop over ℓ — the number of
 factors grows, so shapes change per step and each step jits separately);
 every inner solve is a jitted ``palm4msa`` call.
+
+Compile stability: every inner solve goes through a shape-bucketing trace
+cache (:func:`_run_palm`).  Solves are bucketed by ``(matrix shape/dtype,
+factor shapes, proj specs, iteration/step hyperparameters)``; because
+:func:`repro.core.projections.make_proj` returns value-hashable
+:class:`~repro.core.projections.ProjSpec` objects, an identical bucket hits
+jax's jit cache instead of retracing — repeated same-shape splits within a
+run, and *repeated matrices* across runs (model layers, §VI-C per-σ
+dictionary sweeps), reuse traces.  Each run's hit/miss counts are surfaced
+in the returned :class:`HierarchicalInfo`.
+
+``hierarchical_factorization_batched`` runs the whole ℓ-loop over a stack of
+``B`` same-shaped matrices with :func:`repro.core.palm4msa.palm4msa_batched`
+— one trace and one dispatch per (split, refine) step for the entire stack.
 """
 from __future__ import annotations
 
@@ -17,11 +31,112 @@ from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.faust import Faust, default_init, identity_like
-from repro.core.palm4msa import Proj, palm4msa, product
+from repro.core.palm4msa import Proj, palm4msa, palm4msa_batched, product
 
 Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Shape-bucketing compile cache (jit trace reuse accounting)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CacheStats:
+    """palm4msa trace-cache counters for one hierarchical run.
+
+    A *miss* is a solve whose ``(shapes, proj-spec, hyperparameter)`` bucket
+    was not seen before in this process — i.e. a solve that pays an XLA
+    trace+compile.  A *hit* reuses an existing trace (the Python-level
+    bucket set mirrors jax's own jit cache key: array shapes/dtypes plus the
+    value-hashable static arguments)."""
+
+    hits: int = 0
+    misses: int = 0
+
+    @property
+    def total(self) -> int:
+        return self.hits + self.misses
+
+
+@dataclasses.dataclass
+class HierarchicalInfo:
+    """Run record returned alongside the factorization.
+
+    ``global_losses`` — final global-refinement data-fidelity per split step
+    (floats; ``(B,)`` arrays for the batched variant).
+    ``cache``         — this run's :class:`CacheStats`.
+    ``jit_cache_size``— distinct palm4msa/palm4msa_batched traces alive
+    process-wide after the run (compile-count ground truth)."""
+
+    global_losses: list
+    cache: CacheStats
+    jit_cache_size: int
+
+
+_SEEN_BUCKETS: set = set()
+_GLOBAL_STATS = CacheStats()
+
+
+def jit_cache_size() -> int:
+    """Total live traces of the two palm4msa entry points (−1 if the jax
+    version does not expose ``_cache_size``)."""
+    sizes = [
+        getattr(fn, "_cache_size", lambda: -1)()
+        for fn in (palm4msa, palm4msa_batched)
+    ]
+    return -1 if any(s < 0 for s in sizes) else sum(sizes)
+
+
+def trace_cache_stats() -> CacheStats:
+    """Cumulative process-wide bucket hit/miss counters."""
+    return dataclasses.replace(_GLOBAL_STATS)
+
+
+def reset_trace_cache() -> None:
+    """Forget all buckets *and* drop the compiled palm4msa traces — used by
+    benchmarks that want cold-start compile accounting."""
+    _SEEN_BUCKETS.clear()
+    _GLOBAL_STATS.hits = 0
+    _GLOBAL_STATS.misses = 0
+    for fn in (palm4msa, palm4msa_batched):
+        getattr(fn, "clear_cache", lambda: None)()
+
+
+def _run_palm(stats: CacheStats, a: Array, factors, lam, projs, n_iter, *,
+              frozen=None, alpha, power_iters, init_feasible=False,
+              batched=False):
+    """Dispatch one palm4msa solve through the shape-bucketing cache."""
+    bucket = (
+        batched,
+        a.shape,
+        str(a.dtype),
+        tuple(f.shape for f in factors),
+        projs,
+        n_iter,
+        frozen,
+        alpha,
+        power_iters,
+        init_feasible,
+    )
+    # projs must be hashable regardless (they are static args of the jitted
+    # solver), so the bucket is always hashable here
+    hit = bucket in _SEEN_BUCKETS
+    if not hit:
+        _SEEN_BUCKETS.add(bucket)
+    stats.hits += hit
+    stats.misses += not hit
+    _GLOBAL_STATS.hits += hit
+    _GLOBAL_STATS.misses += not hit
+    fn = palm4msa_batched if batched else palm4msa
+    return fn(
+        a, factors, lam, projs, n_iter,
+        frozen=frozen, alpha=alpha, power_iters=power_iters,
+        init_feasible=init_feasible,
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,26 +186,34 @@ def _two_factor_init(t: Array, d: int, init: str):
     return (s0, t0), jnp.asarray(1.0, t.dtype)
 
 
-def hierarchical_factorization(a: Array, spec: HierarchicalSpec) -> tuple[Faust, list[float]]:
-    """Paper Fig. 5. Returns the J-factor FAµST and the per-step global loss.
+def _hierarchical_loop(
+    a: Array, spec: HierarchicalSpec, batched: bool
+) -> tuple[tuple[Array, ...], Array, HierarchicalInfo]:
+    """The Fig. 5 ℓ-loop, shared by the sequential and batched drivers (the
+    only differences: the init helper, the `batched` solver dispatch, and
+    per-matrix loss extraction).  Keeping the conditioning-critical
+    invariants — unit-norm residual carry, ``init_feasible`` on refines
+    only — in exactly one place is what the batched-vs-sequential parity
+    contract rests on.
 
-    Factor order bookkeeping: ``palm4msa`` factors are in application order
-    (rightmost first), so at step ℓ the list is [S_1, ..., S_ℓ, T_ℓ].
+    Returns (chain factors in application order, λ, info).
     """
-    m, n = a.shape
     n_splits = len(spec.factor_projs)
     assert len(spec.resid_projs) == n_splits and len(spec.inner_dims) == n_splits
 
-    t = a  # T_0
+    t = a  # T_0 (stack)
     s_factors: list[Array] = []  # S_1 .. S_ℓ (application order)
-    lam = jnp.asarray(1.0, a.dtype)
-    global_losses: list[float] = []
+    lam = jnp.ones(a.shape[:1], a.dtype) if batched else jnp.asarray(1.0, a.dtype)
+    global_losses: list = []
+    stats = CacheStats()
+    init_fn = _two_factor_init_batched if batched else _two_factor_init
 
     for ell in range(1, n_splits + 1):
         d = spec.inner_dims[ell - 1]
         # ---- line 3: 2-factor split of the residual ------------------------
-        init_factors, init_lam = _two_factor_init(t, d, spec.init)
-        two = palm4msa(
+        init_factors, init_lam = init_fn(t, d, spec.init)
+        two = _run_palm(
+            stats,
             t,
             init_factors,
             init_lam,
@@ -98,6 +221,7 @@ def hierarchical_factorization(a: Array, spec: HierarchicalSpec) -> tuple[Faust,
             spec.n_iter_two,
             alpha=spec.alpha,
             power_iters=spec.power_iters,
+            batched=batched,
         )
         s_ell, t_ell = two.factors
         # line 4 (conditioning variant): the paper folds λ' into T_ℓ; we keep
@@ -114,7 +238,8 @@ def hierarchical_factorization(a: Array, spec: HierarchicalSpec) -> tuple[Faust,
         # ---- line 5: global refinement over [S_1..S_ℓ, T_ℓ] ---------------
         factors = tuple(s_factors) + (t,)
         projs = tuple(spec.factor_projs[:ell]) + (spec.resid_projs[ell - 1],)
-        glob = palm4msa(
+        glob = _run_palm(
+            stats,
             a,
             factors,
             lam,
@@ -123,14 +248,84 @@ def hierarchical_factorization(a: Array, spec: HierarchicalSpec) -> tuple[Faust,
             alpha=spec.alpha,
             power_iters=spec.power_iters,
             init_feasible=True,  # factors all came out of projections
+            batched=batched,
         )
         s_factors = list(glob.factors[:-1])
         t = glob.factors[-1]
         lam = glob.lam
-        global_losses.append(float(glob.loss_history[-1]))
+        global_losses.append(
+            np.asarray(glob.loss_history[:, -1])
+            if batched
+            else float(glob.loss_history[-1])
+        )
 
     # line 7: S_J ← T_{J-1}
-    return Faust(tuple(s_factors) + (t,), lam), global_losses
+    chain = tuple(s_factors) + (t,)
+    info = HierarchicalInfo(global_losses, stats, jit_cache_size())
+    return chain, lam, info
+
+
+def hierarchical_factorization(
+    a: Array, spec: HierarchicalSpec
+) -> tuple[Faust, HierarchicalInfo]:
+    """Paper Fig. 5. Returns the J-factor FAµST and a :class:`HierarchicalInfo`
+    (per-step global losses + trace-cache hit/miss counters for this run).
+
+    Factor order bookkeeping: ``palm4msa`` factors are in application order
+    (rightmost first), so at step ℓ the list is [S_1, ..., S_ℓ, T_ℓ].
+    """
+    assert a.ndim == 2, f"expected (m, n); got {a.shape}"
+    chain, lam, info = _hierarchical_loop(a, spec, batched=False)
+    return Faust(chain, lam), info
+
+
+# ---------------------------------------------------------------------------
+# Batched hierarchical factorization — a stack of same-shaped matrices
+# ---------------------------------------------------------------------------
+
+
+def _two_factor_init_batched(t: Array, d: int, init: str):
+    """Batched :func:`_two_factor_init`: ``t`` is ``(B, m, n)``; identity
+    slots broadcast across the batch, warm-carried residuals stay batched."""
+    bsz, m, n = t.shape
+
+    def tile(x: Array) -> Array:
+        return jnp.broadcast_to(x, (bsz,) + x.shape)
+
+    if init == "paper_default":
+        (s0, t0), lam = default_init((n, d, m), dtype=t.dtype)
+        return (tile(s0), tile(t0)), jnp.full((bsz,), lam, dtype=t.dtype)
+    if d == n:  # carry t in the residual slot (verified exact on Hadamard)
+        s0, t0 = tile(identity_like((d, n), t.dtype)), t
+    elif d == m:  # rectangular first split, MEG-style: carry in the factor
+        s0, t0 = t, tile(identity_like((m, d), t.dtype))
+    else:  # no shape-compatible warm carry; fall back to identities
+        s0 = tile(identity_like((d, n), t.dtype))
+        t0 = tile(identity_like((m, d), t.dtype))
+    return (s0, t0), jnp.ones((bsz,), dtype=t.dtype)
+
+
+def hierarchical_factorization_batched(
+    a: Array, spec: HierarchicalSpec
+) -> tuple[list[Faust], HierarchicalInfo]:
+    """Paper Fig. 5 over a stack of ``B`` same-shaped matrices ``(B, m, n)``.
+
+    Runs the *same* ℓ-loop as :func:`hierarchical_factorization`, but every
+    inner solve is a single :func:`~repro.core.palm4msa.palm4msa_batched`
+    call over the whole stack — one trace and one dispatch per (split,
+    refine) step regardless of B, instead of a Python loop over per-matrix
+    solves.  Per-matrix results match sequential runs to fp tolerance
+    (``benchmarks/batch_compress.py`` asserts RE parity ≤ 1e-5).
+
+    Returns one :class:`Faust` per matrix plus a :class:`HierarchicalInfo`
+    whose ``global_losses`` entries are ``(B,)`` arrays.
+    """
+    assert a.ndim == 3, f"expected (B, m, n); got {a.shape}"
+    chain, lam, info = _hierarchical_loop(a, spec, batched=True)
+    fausts = [
+        Faust(tuple(f[i] for f in chain), lam[i]) for i in range(a.shape[0])
+    ]
+    return fausts, info
 
 
 def hierarchical_dictionary(
@@ -139,7 +334,7 @@ def hierarchical_dictionary(
     gamma0: Array,
     spec: HierarchicalSpec,
     sparse_coding: Callable[[Array, Array], Array],
-) -> tuple[Faust, Array, list[float]]:
+) -> tuple[Faust, Array, HierarchicalInfo]:
     """Paper Fig. 11 — hierarchical factorization for dictionary learning.
 
     ``y``: data (m, L); ``d0``: initial dictionary (m, n) (e.g. from DDL);
@@ -149,17 +344,24 @@ def hierarchical_dictionary(
     rightmost factor; the coefficients are then re-estimated by sparse
     coding against the current FAµST dictionary.
     """
+    from repro.core import projections as P
+
     n_splits = len(spec.factor_projs)
     t = d0
     gamma = gamma0
     s_factors: list[Array] = []
     lam = jnp.asarray(1.0, y.dtype)
     global_losses: list[float] = []
+    stats = CacheStats()
+    # Γ is frozen — its projection is never applied; a value-hashable id
+    # spec keeps the per-σ sweep (§VI-C) on one trace per shape bucket.
+    id_proj = P.make_proj("id")
 
     for ell in range(1, n_splits + 1):
         d = spec.inner_dims[ell - 1]
         init_factors, init_lam = _two_factor_init(t, d, spec.init)
-        two = palm4msa(
+        two = _run_palm(
+            stats,
             t,
             init_factors,
             init_lam,
@@ -176,12 +378,13 @@ def hierarchical_dictionary(
         # global optimization on Y, Γ frozen as rightmost factor
         factors = (gamma,) + tuple(s_factors) + (t,)
         projs = (
-            (lambda x: x),  # Γ frozen — projection never applied
+            id_proj,  # Γ frozen — projection never applied
             *spec.factor_projs[:ell],
             spec.resid_projs[ell - 1],
         )
         frozen = (True,) + (False,) * (ell + 1)
-        glob = palm4msa(
+        glob = _run_palm(
+            stats,
             y,
             factors,
             lam,
@@ -202,7 +405,8 @@ def hierarchical_dictionary(
         dict_now = lam * product(tuple(s_factors) + (t,))
         gamma = sparse_coding(y, dict_now)
 
-    return Faust(tuple(s_factors) + (t,), lam), gamma, global_losses
+    info = HierarchicalInfo(global_losses, stats, jit_cache_size())
+    return Faust(tuple(s_factors) + (t,), lam), gamma, info
 
 
 # ---------------------------------------------------------------------------

@@ -44,3 +44,13 @@ def spectral_norm(a: Array, iters: int = 32) -> Array:
 def spectral_norm_sq(a: Array, iters: int = 32) -> Array:
     s = spectral_norm(a, iters=iters)
     return s * s
+
+
+def spectral_norm_batched(a: Array, iters: int = 32) -> Array:
+    """``(B, m, n) → (B,)`` largest singular values, one vmapped power
+    iteration — all B iterates advance in lockstep as batched matvecs.
+    This is the standalone form of what ``palm4msa_batched`` computes
+    internally (its vmapped sweep batches :func:`spectral_norm_sq` the same
+    way); each matrix runs exactly the sequential iteration, so results
+    match :func:`spectral_norm` per slice to fp tolerance."""
+    return jax.vmap(lambda x: spectral_norm(x, iters=iters))(a)

@@ -18,11 +18,13 @@ MXU-friendly supports.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Array = jax.Array
 
@@ -205,27 +207,83 @@ def proj_piecewise_const(
 # ---------------------------------------------------------------------------
 # Constraint-set descriptors
 # ---------------------------------------------------------------------------
-# palm4msa receives projections as plain callables Array -> Array. These
-# helpers build them with the sparsity parameters baked in (hashable for jit
-# through closure capture; palm4msa treats them as static).
+# palm4msa receives projections as callables Array -> Array and treats them
+# as *static* under jit, so jax's trace cache keys on their hash/equality.
+# make_proj therefore returns a :class:`ProjSpec` — a frozen dataclass that
+# is hashable *by value*: two specs built with the same (kind, params) are
+# equal, so rebuilding a constraint schedule (a second same-shaped matrix, a
+# per-σ dictionary sweep, every layer of a model) reuses the existing
+# palm4msa traces instead of recompiling.  (Plain lambdas hash by identity —
+# the pre-batching implementation retraced on every fresh schedule.)
 
 
-def make_proj(kind: str, **kw) -> Callable[[Array], Array]:
-    table = {
-        "global": lambda x: proj_global_topk(x, kw["k"]),
-        "col": lambda x: proj_col_topk(x, kw["k"]),
-        "row": lambda x: proj_row_topk(x, kw["k"]),
-        "splincol": lambda x: proj_splincol(x, kw["k"]),
-        "support": lambda x: proj_support(x, kw["support"]),
-        "block": lambda x: proj_block_topk(x, kw["bm"], kw["bn"], kw["n_blocks"]),
-        "blockrow": lambda x: proj_blockrow_topk(
-            x, kw["bm"], kw["bn"], kw["k_per_row"]
-        ),
-        "blockcol": lambda x: proj_blockcol_topk(
-            x, kw["bm"], kw["bn"], kw["k_per_col"]
-        ),
-        "id": lambda x: proj_id(x, normalize=kw.get("normalize", False)),
-    }
-    if kind not in table:
+@dataclasses.dataclass(frozen=True)
+class _HashableArray:
+    """Array-valued projection parameter (e.g. a prescribed support),
+    hashable/comparable by content so it can ride in a :class:`ProjSpec`."""
+
+    data: bytes
+    shape: tuple[int, ...]
+    dtype: str
+
+    @classmethod
+    def wrap(cls, arr) -> "_HashableArray":
+        a = np.asarray(arr)
+        return cls(a.tobytes(), a.shape, str(a.dtype))
+
+    def unwrap(self) -> Array:
+        return jnp.asarray(
+            np.frombuffer(self.data, dtype=self.dtype).reshape(self.shape)
+        )
+
+
+_PROJ_TABLE: dict[str, Callable[..., Array]] = {
+    "global": proj_global_topk,
+    "col": proj_col_topk,
+    "row": proj_row_topk,
+    "splincol": proj_splincol,
+    "support": proj_support,
+    "block": proj_block_topk,
+    "blockrow": proj_blockrow_topk,
+    "blockcol": proj_blockcol_topk,
+    "id": proj_id,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ProjSpec:
+    """A projection with its sparsity parameters baked in, equal-by-value.
+
+    ``kind`` selects the projection function; ``params`` is the sorted tuple
+    of keyword items (arrays wrapped content-hashable).  Calling the spec
+    applies the projection, so it is a drop-in replacement for the plain
+    closures palm4msa historically received.
+    """
+
+    kind: str
+    params: tuple[tuple[str, object], ...]
+
+    def __call__(self, x: Array) -> Array:
+        kw = {
+            k: (v.unwrap() if isinstance(v, _HashableArray) else v)
+            for k, v in self.params
+        }
+        return _PROJ_TABLE[self.kind](x, **kw)
+
+
+def make_proj(kind: str, **kw) -> ProjSpec:
+    if kind not in _PROJ_TABLE:
         raise ValueError(f"unknown projection kind {kind!r}")
-    return table[kind]
+    items = []
+    for key in sorted(kw):
+        v = kw[key]
+        if isinstance(v, (jax.Array, np.ndarray)):
+            v = _HashableArray.wrap(v)
+        elif isinstance(v, (bool, np.bool_)):
+            v = bool(v)
+        elif isinstance(v, (int, np.integer)):
+            v = int(v)
+        elif isinstance(v, (float, np.floating)):
+            v = float(v)
+        items.append((key, v))
+    return ProjSpec(kind, tuple(items))

@@ -10,7 +10,9 @@ compute win.  This kernel applies the whole chain in **one** ``pallas_call``:
 
   * the packed flat layout (``repro.core.compress.PackedChain``) concatenates
     all factors' ``(block × block)`` value blocks into ``values (S, blk, blk)``
-    in ``(factor j, out block o, slot k)`` order, so the grid's minor
+    in ``(factor j, out block o, slot k)`` order — see the ASCII layout
+    diagram on ``repro.core.compress.ChainPlan`` for the step ordering and
+    the ``offsets`` factor-boundary metadata — so the grid's minor
     dimension simply streams block ``s`` per step with automatic double
     buffering — HBM traffic for weights is exactly ``s_tot`` values, once;
   * a per-step metadata table (scalar-prefetched, ``(S, 7)`` int32) tells

@@ -125,6 +125,20 @@ def faust_linear_apply(
     )
 
 
+def blockfaust_to_params(bf: BlockFaust) -> dict:
+    """Annotated FaustLinear params from a compressed :class:`BlockFaust` —
+    the bridge from the ``core.compress`` pipelines (``compress_matrix*``,
+    ``compress_layers``, ``compress_model``) into the serving layer."""
+    factors = [
+        {
+            "values": annotate(f.values, "blocks", "block_k", None, None),
+            "in_idx": annotate(f.in_idx, "blocks", "block_k"),
+        }
+        for f in bf.factors
+    ]
+    return {"factors": factors, "lam": annotate(bf.lam)}
+
+
 def from_dense(
     w: Array,
     spec: FaustSpec,
@@ -147,11 +161,30 @@ def from_dense(
         n_iter_two=n_iter_two,
         n_iter_global=n_iter_global,
     )
-    factors = [
-        {
-            "values": annotate(f.values, "blocks", "block_k", None, None),
-            "in_idx": annotate(f.in_idx, "blocks", "block_k"),
-        }
-        for f in bf.factors
-    ]
-    return {"factors": factors, "lam": annotate(bf.lam)}
+    return blockfaust_to_params(bf)
+
+
+def from_dense_batched(
+    ws: Array,
+    spec: FaustSpec,
+    n_iter_two: int = 40,
+    n_iter_global: int = 40,
+) -> list[dict]:
+    """:func:`from_dense` over a stack ``ws (B, in, out)`` of same-shaped
+    kernels, solved by the batched PALM4MSA engine — one compile and one
+    batched hierarchical solve for the whole stack (every same-shaped linear
+    layer of a model in one shot) instead of B sequential factorizations.
+    Returns one param dict per kernel."""
+    from repro.core.compress import compress_matrix_batched
+
+    bfs, _, _ = compress_matrix_batched(
+        ws,
+        n_factors=spec.n_factors,
+        bk=spec.block,
+        bn=spec.block,
+        k_first=spec.k,
+        k_mid=spec.k,
+        n_iter_two=n_iter_two,
+        n_iter_global=n_iter_global,
+    )
+    return [blockfaust_to_params(bf) for bf in bfs]

@@ -17,14 +17,17 @@ import pytest
 from repro.core import (
     Faust,
     compress_matrix,
+    compress_matrix_batched,
     default_init,
     hadamard_matrix,
     hadamard_spec,
     hierarchical_factorization,
     meg_style_spec,
     palm4msa,
+    palm4msa_batched,
     product,
     spectral_norm,
+    spectral_norm_batched,
 )
 from repro.core import projections as P
 
@@ -91,6 +94,110 @@ def test_palm4msa_frozen_factor_untouched():
         frozen=(True, False),
     )
     np.testing.assert_array_equal(np.asarray(res.factors[0]), np.asarray(g0))
+
+
+def test_spectral_norm_batched_matches_per_matrix():
+    rng = np.random.default_rng(10)
+    a = jnp.asarray(rng.normal(size=(3, 12, 20)).astype(np.float32))
+    got = np.asarray(spectral_norm_batched(a, iters=64))
+    for i in range(3):
+        want = float(spectral_norm(a[i], iters=64))
+        assert np.isclose(got[i], want, rtol=1e-5), (i, got[i], want)
+
+
+def test_make_proj_hashable_by_value():
+    """Equal (kind, params) ⇒ equal specs ⇒ palm4msa jit cache hits when a
+    constraint schedule is rebuilt (the compile-stability contract)."""
+    assert P.make_proj("global", k=4) == P.make_proj("global", k=4)
+    assert hash(P.make_proj("splincol", k=2)) == hash(P.make_proj("splincol", k=2))
+    assert P.make_proj("global", k=4) != P.make_proj("global", k=5)
+    assert P.make_proj("blockcol", bm=8, bn=8, k_per_col=2) == P.make_proj(
+        "blockcol", k_per_col=2, bn=8, bm=8
+    )
+    # numpy scalars normalize to python ints — same bucket either way
+    assert P.make_proj("global", k=np.int64(4)) == P.make_proj("global", k=4)
+    # specs still project identically to the functions they wrap
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.normal(size=(8, 8)).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(P.make_proj("global", k=16)(x)),
+        np.asarray(P.proj_global_topk(x, 16)),
+    )
+
+
+@pytest.mark.parametrize("bsz", [1, 3])
+def test_palm4msa_batched_matches_sequential(bsz):
+    """The batched solver is the vmapped sequential sweep: per-matrix
+    factors, λ, and loss histories must match per-matrix solves."""
+    rng = np.random.default_rng(12)
+    a = jnp.asarray(rng.normal(size=(bsz, 16, 16)).astype(np.float32))
+    factors, lam = default_init((16, 16, 16))
+    factors_b = tuple(jnp.broadcast_to(f, (bsz,) + f.shape) for f in factors)
+    projs = (P.make_proj("global", k=64), P.make_proj("global", k=64))
+
+    res_b = palm4msa_batched(a, factors_b, lam, projs, n_iter=30)
+    assert res_b.loss_history.shape == (bsz, 30)
+    for i in range(bsz):
+        res_i = palm4msa(a[i], factors, lam, projs, n_iter=30)
+        for j in range(len(factors)):
+            np.testing.assert_allclose(
+                np.asarray(res_b.factors[j][i]),
+                np.asarray(res_i.factors[j]),
+                rtol=1e-5,
+                atol=1e-6,
+            )
+        np.testing.assert_allclose(
+            float(res_b.lam[i]), float(res_i.lam), rtol=1e-5
+        )
+        np.testing.assert_allclose(
+            np.asarray(res_b.loss_history[i]),
+            np.asarray(res_i.loss_history),
+            rtol=1e-4,
+            atol=1e-7,
+        )
+
+
+def test_compress_matrix_batched_matches_sequential():
+    """Batched compression reproduces per-matrix compress_matrix outputs."""
+    rng = np.random.default_rng(13)
+    ws = jnp.asarray(rng.normal(size=(2, 24, 40)).astype(np.float32))
+    kw = dict(n_factors=2, bk=8, bn=8, k_first=3, k_mid=2,
+              n_iter_two=15, n_iter_global=15)
+    bfs, fausts, info = compress_matrix_batched(ws, **kw)
+    assert len(bfs) == len(fausts) == 2
+    assert info.cache.total == 2  # one split + one global refine
+    for i in range(2):
+        bf_i, _ = compress_matrix(ws[i], **kw)
+        np.testing.assert_allclose(
+            np.asarray(bfs[i].todense()),
+            np.asarray(bf_i.todense()),
+            rtol=1e-5,
+            atol=1e-6,
+        )
+        assert bfs[i].todense().shape == (24, 40)
+
+
+def test_hierarchical_trace_cache_reuse():
+    """Re-running on a second same-shaped matrix with a *rebuilt* constraint
+    schedule must not retrace: the bucket cache reports pure hits and the
+    palm4msa jit caches grow by zero traces."""
+    rng = np.random.default_rng(14)
+    # unusual shape so this test owns its buckets regardless of test order
+    m, n = 24, 44
+    a1 = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+    a2 = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+    kw = dict(n_factors=3, k=5, s=48, n_iter_two=12, n_iter_global=12)
+
+    f1, info1 = hierarchical_factorization(a1, meg_style_spec(m, n, **kw))
+    # fresh spec objects on purpose: value-hashable projs make them equal
+    f2, info2 = hierarchical_factorization(a2, meg_style_spec(m, n, **kw))
+
+    assert info1.cache.total == info2.cache.total == 4  # 2 splits + 2 refines
+    assert info2.cache.hits == info1.cache.total
+    assert info2.cache.misses == 0
+    if info1.jit_cache_size >= 0:  # jax exposes _cache_size on this version
+        assert info2.jit_cache_size == info1.jit_cache_size
+    assert f2.shape == f1.shape == (m, n)
 
 
 @pytest.mark.slow

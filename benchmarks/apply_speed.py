@@ -1,15 +1,22 @@
 """Paper §II-B2 RCG flop model: measured apply time + roofline transfer.
 
-Measures dense vs FAµST matmuls and reports the flop model (2·s_tot vs
-2·m·n) plus the TPU roofline estimate.  Reports **both** chain paths:
+Measures dense vs FAµST matmuls through the unified operator API
+(``repro.api.FaustOp``) and reports the flop model (2·s_tot vs 2·m·n)
+plus the TPU roofline estimate.  Reports **both** chain paths:
 
-* ``per-factor`` — one launch per factor (``blockfaust_apply``), which on
-  hardware pays a 2·batch·d_j HBM round-trip of the intermediate
-  activations at every factor boundary;
-* ``fused``      — the single-``pallas_call`` chain kernel
-  (``blockfaust_apply(..., fuse=True)``, ``kernels/chain.py``) whose
-  intermediates stay in VMEM scratch, so the memory-roofline term drops
-  from ``s_tot + 2·batch·Σ_j d_j`` to ``s_tot + batch·(d_in + d_out)``.
+* ``bsr``   — one launch per factor (``FaustOp.apply(backend="bsr")``),
+  which on hardware pays a 2·batch·d_j HBM round-trip of the
+  intermediate activations at every factor boundary;
+* ``fused`` — the single-``pallas_call`` chain kernel
+  (``backend="fused"``, ``kernels/chain.py``) whose intermediates stay
+  in VMEM scratch, so the memory-roofline term drops from
+  ``s_tot + 2·batch·Σ_j d_j`` to ``s_tot + batch·(d_in + d_out)``.
+
+``backend="auto"`` runs the cost-model dispatch
+(``repro.api.dispatch``); the resulting :class:`DispatchReport` is
+recorded on the benchmark row (``run.py --json``) and this benchmark
+asserts the auto path reproduces the forced paths to ≤ 1e-6 relative
+error — the acceptance gate for the dispatch layer.
 
 Also verifies the launch-count claim structurally: the fused path stages
 exactly **one** pallas_call into the jaxpr vs J on the per-factor path.
@@ -23,8 +30,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, timeit_us
-from repro.core.compress import BlockFaust, pack_chain, random_block_factor
-from repro.kernels.ops import blockfaust_apply, packed_chain_apply
+from repro.api import FaustOp, last_report
+from repro.core.compress import BlockFaust, random_block_factor
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
@@ -36,9 +43,15 @@ def count_pallas_calls(fn, *args) -> int:
     return str(jaxpr).count("pallas_call")
 
 
+def _rel(a, b) -> float:
+    a, b = np.asarray(a, np.float64), np.asarray(b, np.float64)
+    return float(np.linalg.norm(a - b) / max(np.linalg.norm(b), 1e-30))
+
+
 def run(cases=((1024, 4096, 2, 4, 128), (2048, 8192, 2, 4, 128), (2048, 8192, 3, 4, 128)),
         batch: int = 128) -> None:
     on_tpu = jax.default_backend() == "tpu"
+    use_kernel = True  # interpret-mode emulation off-TPU
     interpret = not on_tpu
     for in_dim, out_dim, n_factors, blocks_k, block in cases:
         keys = jax.random.split(jax.random.PRNGKey(0), n_factors)
@@ -47,19 +60,31 @@ def run(cases=((1024, 4096, 2, 4, 128), (2048, 8192, 2, 4, 128), (2048, 8192, 3,
             random_block_factor(keys[i], dims[i], dims[i + 1], block, block, blocks_k)
             for i in range(n_factors)
         )
-        bf = BlockFaust(factors, jnp.asarray(1.0))
-        chain = pack_chain(bf)
-        w = bf.todense()
+        op = FaustOp.from_blockfaust(BlockFaust(factors, jnp.asarray(1.0)))
+        w = op.todense()
         x = jax.random.normal(jax.random.PRNGKey(1), (batch, in_dim))
 
         dense_fn = jax.jit(lambda v: v @ w)
-        faust_fn = jax.jit(lambda v: blockfaust_apply(v, bf))
+        faust_fn = jax.jit(lambda v: op.apply(v, backend="bsr", use_kernel=False))
         perfac_fn = jax.jit(
-            lambda v: blockfaust_apply(v, bf, use_kernel=True, interpret=interpret)
+            lambda v: op.apply(v, backend="bsr", use_kernel=use_kernel,
+                               interpret=interpret)
         )
         fused_fn = jax.jit(
-            lambda v: packed_chain_apply(v, chain, use_kernel=True, interpret=interpret)
+            lambda v: op.apply(v, backend="fused", use_kernel=use_kernel,
+                               interpret=interpret)
         )
+        auto_fn = jax.jit(lambda v: op.apply(v, backend="auto", use_kernel=False))
+        y_auto = auto_fn(x)
+        report = last_report()  # decision staged by the auto trace
+        y_perfac, y_fused = perfac_fn(x), fused_fn(x)
+        # acceptance gate: one operator, one answer, whatever the backend
+        parity = max(_rel(y_fused, y_perfac), _rel(y_auto, y_perfac))
+        if parity > 1e-6:
+            raise RuntimeError(
+                f"backend parity broken ({in_dim}x{out_dim} J{n_factors}): "
+                f"{parity:.3e} > 1e-6"
+            )
         t_dense = timeit_us(dense_fn, x)
         t_faust = timeit_us(faust_fn, x)
         t_perfac = timeit_us(perfac_fn, x)
@@ -69,15 +94,15 @@ def run(cases=((1024, 4096, 2, 4, 128), (2048, 8192, 2, 4, 128), (2048, 8192, 3,
         assert n_calls_fused == 1, n_calls_fused
         assert n_calls_perfac == n_factors, (n_calls_perfac, n_factors)
 
-        rcg = bf.rcg()
+        rcg = op.rcg
         dense_flops = 2 * in_dim * out_dim * batch
-        faust_flops = 2 * bf.s_tot * batch
+        faust_flops = 2 * op.s_tot * batch
         # TPU roofline (bf16 bytes): weights + boundary activations only for
         # the fused path, + intermediate activation round-trips per-factor
         act_inner = 2 * batch * sum(dims[1:-1])  # stored + reloaded
         act_edge = batch * (in_dim + out_dim)
-        bytes_fused = 2 * (bf.s_tot + act_edge)  # leading 2 = bf16 bytes/elt
-        bytes_perfac = 2 * (bf.s_tot + act_edge + act_inner)
+        bytes_fused = 2 * (op.s_tot + act_edge)  # leading 2 = bf16 bytes/elt
+        bytes_perfac = 2 * (op.s_tot + act_edge + act_inner)
         t_tpu_dense = max(dense_flops / PEAK_FLOPS, 2 * (in_dim * out_dim + act_edge) / HBM_BW)
         t_tpu_fused = max(faust_flops / PEAK_FLOPS, bytes_fused / HBM_BW)
         t_tpu_perfac = max(faust_flops / PEAK_FLOPS, bytes_perfac / HBM_BW)
@@ -88,9 +113,11 @@ def run(cases=((1024, 4096, 2, 4, 128), (2048, 8192, 2, 4, 128), (2048, 8192, 3,
             f"fused_us={t_fused:.1f};pallas_calls={n_calls_perfac}->{n_calls_fused};"
             f"speedup={t_dense / max(t_faust, 1e-9):.2f};"
             f"RCG={rcg:.2f};flop_gain={dense_flops / faust_flops:.2f};"
+            f"auto_backend={report.backend};parity={parity:.1e};"
             f"tpu_roofline_gain={t_tpu_dense / t_tpu_fused:.2f};"
             f"tpu_fuse_gain={t_tpu_perfac / t_tpu_fused:.2f};"
             f"interpret={int(interpret)}",
+            dispatch=report,
         )
 
 

@@ -25,17 +25,25 @@ def timeit_us(fn, *args, n_warmup: int = 2, n_iter: int = 10) -> float:
 _ROWS: list[dict] = []
 
 
-def emit(name: str, us_per_call: float, derived: str) -> None:
+def emit(name: str, us_per_call: float, derived: str, dispatch=None) -> None:
     """CSV row: name,us_per_call,derived.  Rows are also recorded for the
-    runner's ``--json`` machine-readable output (see :func:`rows`)."""
+    runner's ``--json`` machine-readable output (see :func:`rows`).
+
+    ``dispatch``: optional :class:`repro.api.dispatch.DispatchReport` (or
+    pre-flattened dict) — the backend decision behind the measured
+    numbers, attached to the JSON row so the perf trajectory records
+    *which path ran*, not just how fast it was."""
     print(f"{name},{us_per_call:.1f},{derived}")
-    _ROWS.append(
-        {
-            "name": name,
-            "us_per_call": round(us_per_call, 1),
-            "derived": _parse_derived(derived),
-        }
-    )
+    row = {
+        "name": name,
+        "us_per_call": round(us_per_call, 1),
+        "derived": _parse_derived(derived),
+    }
+    if dispatch is not None:
+        row["dispatch"] = (
+            dispatch.as_row() if hasattr(dispatch, "as_row") else dict(dispatch)
+        )
+    _ROWS.append(row)
 
 
 def _parse_derived(derived: str) -> dict:

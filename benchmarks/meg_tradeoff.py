@@ -28,7 +28,7 @@ def run(m: int = 102, n: int = 1024, ks=(5, 15, 25), js=(2, 4, 6),
                 n_iter_two=n_iter, n_iter_global=n_iter,
             )
             faust, _ = hierarchical_factorization(a, spec)
-            re = faust.rel_error_spec(a)
+            re = float(faust.rel_error_spec(a))  # Array → eager scalar
             rcg = faust.rcg()
             x = jax.random.normal(jax.random.PRNGKey(1), (n, 64))
             t_faust = timeit_us(jax.jit(faust.apply), x)

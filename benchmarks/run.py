@@ -3,7 +3,10 @@
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks that are
 accuracy-only report us_per_call=0.0).  With ``--json PATH`` the same rows
 are also written as machine-readable JSON (derived ``k=v`` pairs parsed
-into a dict) so the perf trajectory can be tracked across PRs, e.g.::
+into a dict; apply-path benchmarks additionally carry a ``dispatch``
+object — the ``repro.api`` cost-model :class:`DispatchReport` naming
+which backend served the measured numbers) so the perf trajectory can be
+tracked across PRs, e.g.::
 
     PYTHONPATH=src:. python benchmarks/run.py --only apply_speed \
         --json BENCH_apply.json

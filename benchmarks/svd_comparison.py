@@ -35,7 +35,7 @@ def run(m: int = 102, n: int = 1024, ks=(5, 15, 25), j: int = 4,
         spec = meg_style_spec(m, n, n_factors=j, k=k, s=4 * m,
                               n_iter_two=n_iter, n_iter_global=n_iter)
         faust, _ = hierarchical_factorization(a, spec)
-        re_faust = faust.rel_error_spec(a)
+        re_faust = float(faust.rel_error_spec(a))  # Array → eager scalar
         re_svd, r = truncated_svd_error(a, faust.s_tot)
         wins += re_faust < re_svd
         emit(

@@ -3,10 +3,11 @@ a FAµST learned by the paper's hierarchical algorithm (checkpoint surgery).
 
 Workflow:
   1. train a tiny LM for a few steps (dense unembedding);
-  2. factorize the trained unembedding with block-constrained hierarchical
-     palm4MSA (compress_matrix);
+  2. factorize the trained unembedding with the unified front door
+     (``repro.api.factorize``, block-constrained hierarchical palm4MSA);
   3. compare logits of the dense vs FAµST model on held-out batches and
-     report RCG + agreement (top-1 match rate).
+     report RCG + agreement (top-1 match rate), applying the operator
+     with cost-model backend dispatch.
 
 Run: PYTHONPATH=src:. python examples/compress_operator.py
 """
@@ -16,10 +17,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import FactorizeSpec, factorize, last_report
 from repro.configs import get_smoke
-from repro.core.compress import compress_matrix
 from repro.data.pipeline import DataConfig, global_batch
-from repro.kernels.ops import blockfaust_apply
 from repro.models import lm
 from repro.optim.adamw import AdamWConfig
 from repro.runtime.trainer import TrainConfig, Trainer
@@ -41,9 +41,10 @@ def main() -> None:
 
     w = params["unembed"]["w"]  # (d, vocab)
     for k in (2, 4):
-        bf, _ = compress_matrix(
-            w.astype(jnp.float32), n_factors=2, bk=16, bn=16,
-            k_first=k, k_mid=k, n_iter_two=30, n_iter_global=30,
+        op, _ = factorize(
+            w.astype(jnp.float32),
+            FactorizeSpec(n_factors=2, block=16, k_first=k, k_mid=k,
+                          n_iter_two=30, n_iter_global=30),
         )
         batch = {k2: jnp.asarray(v) for k2, v in global_batch(data_cfg, 999).items()}
         logits_dense, _ = lm.forward_train(params, cfg, batch)
@@ -55,7 +56,7 @@ def main() -> None:
         # (cheap demo: compare the unembedding itself on hidden activations)
         hidden = jax.random.normal(jax.random.PRNGKey(1), (512, cfg.d_model)) * 0.5
         dense_logits = hidden @ w
-        faust_logits = blockfaust_apply(hidden, bf)
+        faust_logits = op.apply(hidden, backend="auto")
         top1 = float(
             (jnp.argmax(dense_logits, -1) == jnp.argmax(faust_logits, -1)).mean()
         )
@@ -64,8 +65,8 @@ def main() -> None:
             / jnp.linalg.norm(dense_logits)
         )
         print(
-            f"k={k}: RCG={bf.rcg():.2f}  logits rel-err={rel:.3f}  "
-            f"top-1 agreement={top1*100:.1f}%"
+            f"k={k}: RCG={op.rcg:.2f}  backend={last_report().backend}  "
+            f"logits rel-err={rel:.3f}  top-1 agreement={top1*100:.1f}%"
         )
 
 

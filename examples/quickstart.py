@@ -1,13 +1,16 @@
-"""Quickstart: the paper's algorithm in five minutes.
+"""Quickstart: the paper's algorithm in five minutes, through the
+unified operator API (``repro.api``).
 
 1. Reverse-engineer the Hadamard transform (paper §IV-C) — exact
-   factorization, RCG = n / (2·log2 n).
+   factorization, RCG = n / (2·log2 n) — with one ``factorize`` call.
 2. Factorize an MEG-like operator at a chosen accuracy/complexity
    trade-off (paper §V-A).
-3. Pack it into the deployment BlockFaust and apply it to vectors.
+3. Compress a dense weight into a deployment chain and apply it with
+   cost-model backend dispatch (``FaustOp.apply(backend="auto")``).
 4. Compress a whole stack of same-shaped weights in one batched solve
    (one compile amortized across the stack — EXPERIMENTS.md §Batched
-   compression).
+   compression); the stack comes back as one ``block_diag`` operator.
+5. Operator algebra: lazy adjoint and composition.
 
 Run: PYTHONPATH=src:. python examples/quickstart.py
 """
@@ -16,54 +19,59 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import synthetic_leadfield
-from repro.core import (
-    compress_matrix,
-    compress_matrix_batched,
-    hadamard_matrix,
-    hadamard_spec,
-    hierarchical_factorization,
-    meg_style_spec,
-)
-from repro.kernels.ops import blockfaust_apply
+from repro.api import FactorizeSpec, factorize, last_report
+from repro.core import hadamard_matrix
 
 
 def main() -> None:
     # --- 1. Hadamard ------------------------------------------------------
     n = 32
     a = hadamard_matrix(n)
-    faust, _ = hierarchical_factorization(a, hadamard_spec(n))
-    re = float(jnp.linalg.norm(a - faust.todense()) / jnp.linalg.norm(a))
-    print(f"Hadamard {n}×{n}: {faust.n_factors} factors, "
-          f"s_tot={faust.s_tot} (dense {n*n}), RCG={faust.rcg():.2f}, RE={re:.2e}")
+    had, _ = factorize(a, FactorizeSpec(strategy="hadamard"))
+    print(f"Hadamard {n}×{n}: {had.n_factors} factors, "
+          f"s_tot={had.s_tot} (dense {n*n}), RCG={had.rcg:.2f}, "
+          f"RE={float(had.rel_error_fro(a)):.2e}")
 
     # --- 2. MEG-like operator ---------------------------------------------
     m, nn = 64, 512
     op = synthetic_leadfield(m, nn)
-    spec = meg_style_spec(m, nn, n_factors=4, k=8, s=4 * m)
-    faust2, _ = hierarchical_factorization(op, spec)
-    print(f"leadfield {m}×{nn}: RCG={faust2.rcg():.2f}, "
-          f"RE={faust2.rel_error_spec(op):.4f}")
+    meg, _ = factorize(
+        op, FactorizeSpec(strategy="meg", n_factors=4, k=8, s=4 * m)
+    )
+    print(f"leadfield {m}×{nn}: RCG={meg.rcg:.2f}, "
+          f"RE={float(meg.rel_error_spec(op)):.4f}")
 
-    # --- 3. deployment: packed block-sparse chain ---------------------------
+    # --- 3. deployment: packed chain + auto backend dispatch ----------------
     w = jax.random.normal(jax.random.PRNGKey(0), (128, 256)) * 0.05
-    bf, _ = compress_matrix(w, n_factors=2, bk=16, bn=16, k_first=4, k_mid=4)
+    fop, _ = factorize(
+        w, FactorizeSpec(n_factors=2, block=16, k_first=4, k_mid=4)
+    )
     x = jax.random.normal(jax.random.PRNGKey(1), (8, 128))
-    y = blockfaust_apply(x, bf)
-    err = float(jnp.linalg.norm(y - x @ bf.todense()) / jnp.linalg.norm(y))
-    print(f"BlockFaust 128→256: RCG={bf.rcg():.2f}, packed-apply err={err:.2e}")
+    y = fop.apply(x, backend="auto")
+    err = float(jnp.linalg.norm(y - x @ fop.todense()) / jnp.linalg.norm(y))
+    print(f"FaustOp 128→256: RCG={fop.rcg:.2f}, auto backend="
+          f"{last_report().backend}, apply err={err:.2e}")
 
     # --- 4. batched: a stack of same-shaped weights, one compile ------------
     ws = jax.random.normal(jax.random.PRNGKey(2), (4, 128, 256)) * 0.05
-    bfs, _, info = compress_matrix_batched(
-        ws, n_factors=2, bk=16, bn=16, k_first=4, k_mid=4,
-        n_iter_two=20, n_iter_global=20,
+    stack, info = factorize(
+        ws, FactorizeSpec(n_factors=2, block=16, k_first=4, k_mid=4,
+                          n_iter_two=20, n_iter_global=20)
     )
-    res = [
-        float(jnp.linalg.norm(bfs[i].todense() - ws[i]) / jnp.linalg.norm(ws[i]))
-        for i in range(len(bfs))
-    ]
-    print(f"batched compress 4×(128→256): traces={info.cache.misses} "
-          f"(hits={info.cache.hits}), RE={np.mean(res):.3f}±{np.std(res):.3f}")
+    res = [float(o.rel_error_fro(ws[i])) for i, o in enumerate(info.ops)]
+    print(f"batched compress 4×(128→256) → {stack.kind} operator "
+          f"{stack.shape}: traces={info.hierarchical.cache.misses} "
+          f"(hits={info.hierarchical.cache.hits}), "
+          f"RE={np.mean(res):.3f}±{np.std(res):.3f}")
+
+    # --- 5. operator algebra: lazy adjoint + composition --------------------
+    gram = fop @ fop.T  # (128, 128) operator, still a lazy chain
+    v = jax.random.normal(jax.random.PRNGKey(3), (128,))
+    err = float(jnp.linalg.norm(
+        gram @ v - fop.todense() @ fop.todense().T @ v
+    ) / jnp.linalg.norm(gram @ v))
+    print(f"gram = op @ op.T: shape={gram.shape}, "
+          f"s_tot={gram.s_tot}, err={err:.2e}")
 
 
 if __name__ == "__main__":

@@ -36,6 +36,9 @@ def main() -> None:
     print(f"arch={cfg.name} generated {gen.shape} tokens")
     print(f"prefill {stats.prefill_s*1e3:.0f} ms; "
           f"decode {stats.tokens_per_s:.1f} tok/s")
+    if stats.faust_dispatch is not None:
+        print(f"faust dispatch: {stats.faust_dispatch.backend} "
+              f"({stats.faust_dispatch.reason})")
 
 
 if __name__ == "__main__":

@@ -17,7 +17,15 @@ SEED_PASSED=0
 SEED_FAILED=0
 SEED_ERRORS=2
 
-# Docs check first (cheap): every EXPERIMENTS.md §…/README reference in the
+# Hygiene: no compiled bytecode may be tracked (a PR once committed a full
+# __pycache__ tree; .gitignore prevents new ones, this catches regressions).
+if git ls-files | grep -qE '(^|/)__pycache__/|\.pyc$'; then
+    echo "ci: TRACKED .pyc/__pycache__ FILES:"
+    git ls-files | grep -E '(^|/)__pycache__/|\.pyc$'
+    exit 1
+fi
+
+# Docs check (cheap): every EXPERIMENTS.md §…/README reference in the
 # tree must resolve to an existing file/heading.
 if ! python scripts/check_docs.py; then
     echo "ci: DOCS CHECK FAILED"

@@ -1,0 +1,190 @@
+"""Cost-model backend dispatch for :class:`repro.api.operator.FaustOp`.
+
+``apply(x, backend="auto")`` has three concrete execution paths (dense
+matmul, per-factor BSR chain, fused packed chain) whose crossover depends
+on (batch, shape, dtype, device).  This module picks among them with the
+same roofline machinery the launch tooling uses
+(``launch/roofline.py`` peak constants; ``launch/hlo_cost.py`` for the
+compiled ground truth):
+
+    t(backend) ≈ max(flops / PEAK_FLOPS, bytes / HBM_BW) + launches·t_launch
+
+* ``dense``:  materialize-then-multiply — ``FaustOp`` never caches
+  ``todense()``, so every apply pays the chain product that builds the
+  dense matrix (≈ ``2·s_tot·min(m,n)`` flops over J−1 launches, and an
+  ``m·n`` store + reload) before the ``2·b·m·n`` matmul.  Callers who
+  hold a pre-materialized matrix shouldn't route it through a FaustOp.
+* ``bsr``:    flops ``2·b·s_tot``;     bytes ``s_tot + b·(m+n) +
+  2·b·Σ d_inner`` (every factor boundary round-trips the intermediate
+  activation through HBM); J launches.
+* ``fused``:  flops ``2·b·s_tot``;     bytes ``s_tot + b·(m+n)``
+  (intermediates stay in VMEM scratch); 1 launch.
+
+Every decision is materialized as a :class:`DispatchReport` — benchmarks
+record it next to their numbers (``benchmarks/run.py --json``) and tests
+assert which path ran (the report is also retrievable after the fact via
+:func:`last_report`).  The model is intentionally the *TPU* roofline even
+off-TPU: the decision must be a pure function of (batch, shape, dtype),
+not of where the benchmark happened to run.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+
+# Fixed per-launch overhead (µs).  Breaks roofline ties in favor of
+# fewer launches — the structural argument for the fused chain at small
+# batch, where all paths are far from both roofs.
+LAUNCH_US = 2.0
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchReport:
+    """One backend decision, with its evidence."""
+
+    requested: str  # what the caller asked for ("auto" or forced)
+    backend: str  # what will run
+    batch: int
+    shape: tuple[int, int]
+    dtype: str
+    device: str  # jax.default_backend() at decision time
+    s_tot: int
+    feasible: tuple[str, ...]
+    est_us: dict  # backend -> modeled µs (feasible backends only)
+    reason: str
+
+    def as_row(self) -> dict:
+        """Flat JSON-ready form for benchmark rows."""
+        return {
+            "backend": self.backend,
+            "requested": self.requested,
+            "batch": self.batch,
+            "shape": list(self.shape),
+            "dtype": self.dtype,
+            "device": self.device,
+            "s_tot": self.s_tot,
+            "est_us": {k: round(v, 3) for k, v in self.est_us.items()},
+            "reason": self.reason,
+        }
+
+
+_LAST_REPORT: DispatchReport | None = None
+
+
+def last_report() -> DispatchReport | None:
+    """The most recent decision (auto or forced) made in this process —
+    set at trace time, so it reflects what was staged into the jaxpr."""
+    return _LAST_REPORT
+
+
+def _record(report: DispatchReport) -> DispatchReport:
+    global _LAST_REPORT
+    _LAST_REPORT = report
+    return report
+
+
+def choose_backend(
+    *,
+    batch: int,
+    shape: tuple[int, int],
+    dtype,
+    s_tot: int,
+    inner_dims: tuple[int, ...] = (),
+    n_factors: int = 1,
+    feasible: tuple[str, ...] = ("dense", "bsr", "fused"),
+    requested: str = "auto",
+) -> DispatchReport:
+    """Pick the cheapest feasible backend under the roofline model.
+
+    Pure function of its arguments (device is recorded, not consulted):
+    the same operator/batch always dispatches the same way, so benchmark
+    rows are comparable across hosts.
+    """
+    m, n = shape
+    b = batch
+    elt = jnp.dtype(dtype).itemsize
+
+    def roofline_us(flops: float, byts: float, launches: int) -> float:
+        return (
+            max(flops / PEAK_FLOPS, byts / HBM_BW) * 1e6
+            + launches * LAUNCH_US
+        )
+
+    edge = b * (m + n)
+    inner = 2 * b * sum(inner_dims)
+    # dense = build the matrix (chain product: ~2·s_tot·min(m,n) flops over
+    # J−1 launches, m·n written then re-read) + one dense matmul
+    build_flops = 2.0 * s_tot * min(m, n)
+    est = {
+        "dense": roofline_us(
+            2.0 * b * m * n + build_flops,
+            elt * (2 * m * n + edge),
+            n_factors,
+        ),
+        "bsr": roofline_us(
+            2.0 * b * s_tot, elt * (s_tot + edge + inner), n_factors
+        ),
+        "fused": roofline_us(2.0 * b * s_tot, elt * (s_tot + edge), 1),
+    }
+    est = {k: v for k, v in est.items() if k in feasible}
+    # stable preference on ties: fewest-launch structured path first
+    order = {"fused": 0, "bsr": 1, "dense": 2}
+    backend = min(est, key=lambda k: (est[k], order[k]))
+    runner_up = min(
+        (k for k in est if k != backend),
+        key=lambda k: (est[k], order[k]),
+        default=None,
+    )
+    if runner_up is None:
+        reason = f"only feasible backend ({backend})"
+    else:
+        reason = (
+            f"{backend} modeled {est[backend]:.2f}us vs "
+            f"{runner_up} {est[runner_up]:.2f}us "
+            f"(batch={b}, s_tot={s_tot}, dense_nnz={m * n})"
+        )
+    return DispatchReport(
+        requested=requested,
+        backend=backend,
+        batch=b,
+        shape=(m, n),
+        dtype=jnp.dtype(dtype).name,
+        device=jax.default_backend(),
+        s_tot=s_tot,
+        feasible=tuple(est),
+        est_us=est,
+        reason=reason,
+    )
+
+
+def dispatch(op, batch: int, dtype, requested: str = "auto") -> DispatchReport:
+    """Decide (or record) the backend for one *leaf* operator.
+
+    ``requested="auto"`` runs the cost model; a concrete backend name is
+    a caller override — the report still carries the model's estimates
+    (and what it *would* have picked, in ``reason``) but ``backend`` is
+    the forced one.  Composite operators dispatch per leaf during
+    ``apply``; :func:`last_report` returns the latest decision either way.
+    """
+    report = choose_backend(
+        batch=batch,
+        shape=op.shape,
+        dtype=dtype,
+        s_tot=op.s_tot,
+        inner_dims=op.inner_dims(),
+        n_factors=op.n_factors,
+        feasible=op.feasible_backends(),
+        requested=requested,
+    )
+    if requested != "auto":
+        report = dataclasses.replace(
+            report,
+            backend=requested,
+            reason=f"forced by caller (cost model would pick "
+                   f"{report.backend}: {report.reason})",
+        )
+    return _record(report)

@@ -1,0 +1,353 @@
+"""``factorize(A, spec)`` — the single front door to every solver.
+
+The repo's factorization entry points grew six divergent signatures
+(``palm4msa``, ``palm4msa_batched``, ``hierarchical_factorization``,
+``hierarchical_factorization_batched``, ``compress_matrix[_batched]``) and
+as many return conventions.  This module normalizes them behind one
+declarative call::
+
+    op, info = factorize(a, FactorizeSpec(strategy="hierarchical",
+                                          n_factors=3, block=8))
+
+* ``op``   — a :class:`~repro.api.operator.FaustOp` with
+  ``op.todense() ≈ a`` (for a batched ``(B, m, n)`` input: the
+  ``block_diag`` of the per-matrix operators — the stacked-layer
+  operator — with the individual ops in ``info.ops``).
+* ``info`` — a :class:`FactorizeInfo`: per-matrix optimization-side
+  :class:`~repro.core.faust.Faust` chains, deployment
+  :class:`~repro.core.compress.BlockFaust` chains (block route), solver
+  loss histories, and the hierarchical trace-cache record.
+
+Strategies
+----------
+``"hierarchical"``  the paper's Fig. 5 algorithm.  Constraint source, in
+                    precedence order: an explicit ``spec.hier``
+                    (:class:`~repro.core.hierarchical.HierarchicalSpec`),
+                    or the block-granular §V-A schedule built from
+                    ``spec.block``/``k_first``/``k_mid``/``k_resid`` (the
+                    deployment route — produces packed ``BlockFaust``
+                    chains ready for the serving kernels).
+``"palm4msa"``      one flat PALM solve (paper Fig. 4): needs
+                    ``spec.projs`` + ``spec.dims``.
+``"hadamard"``      §IV-C preset (exact reverse-engineering schedule).
+``"meg"``           §V-A preset (MEG-style RE/RCG trade-off schedule).
+``"dictionary"``    Fig. 11 dictionary-learning variant: needs
+                    ``spec.hier`` plus ``dict_y``/``dict_gamma0``/
+                    ``dict_sparse_coding``; ``a`` is the initial
+                    dictionary; the learned coefficients land in
+                    ``info.gamma``.
+
+Batching is automatic: a 3-D ``(B, m, n)`` input routes every solve
+through the batched engine (one trace + one dispatch per hierarchical
+step for the whole stack).  ``spec.batched`` is a validation override
+only — ``True`` asserts the input really is a stack; ``False`` on a
+stack is rejected (loop ``factorize`` over the matrices to solve a
+stack sequentially).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.operator import FaustOp, block_diag
+from repro.core.compress import (
+    BlockFaust,
+    _compress_spec,
+    _faust_to_blockfaust,
+    _pad_to_multiple,
+)
+from repro.core.faust import Faust, default_init
+from repro.core.hierarchical import (
+    HierarchicalInfo,
+    HierarchicalSpec,
+    hadamard_spec,
+    hierarchical_dictionary,
+    hierarchical_factorization,
+    hierarchical_factorization_batched,
+    meg_style_spec,
+)
+from repro.core.palm4msa import palm4msa, palm4msa_batched
+
+Array = jax.Array
+
+STRATEGIES = ("hierarchical", "palm4msa", "hadamard", "meg", "dictionary")
+
+
+@dataclasses.dataclass(frozen=True)
+class FactorizeSpec:
+    """Declarative factorization request (see module docstring).
+
+    Only the fields of the chosen ``strategy``/route are consulted; the
+    rest keep their defaults.  ``n_iter_two``/``n_iter_global`` are the
+    hierarchical inner/global sweep counts (``n_iter`` for the flat
+    ``palm4msa`` route); ``keep_best`` is the monotone-acceptance rule of
+    ``palm4msa`` (flat route only — the hierarchical drivers manage it
+    per phase).
+    """
+
+    strategy: str = "hierarchical"
+    n_factors: int = 2
+    # -- block-granular route (deployment chains) --
+    block: int | None = None
+    k_first: int = 4
+    k_mid: int = 4
+    k_resid: Sequence[int] | None = None
+    # -- explicit schedules (win over the block route) --
+    hier: HierarchicalSpec | None = None
+    projs: tuple | None = None  # palm4msa route: per-factor projections
+    dims: tuple[int, ...] | None = None  # palm4msa route: (a_1, …, a_{J+1})
+    # -- presets --
+    k: int = 8  # meg: per-column sparsity of S_1
+    s: int | None = None  # meg: global sparsity of mid factors (default 4m)
+    rho: float = 0.8  # meg: residual decay
+    constraints: str = "splincol"  # hadamard: "splincol" | "global"
+    init: str = "warm"
+    # -- solver knobs --
+    n_iter: int = 40
+    n_iter_two: int = 40
+    n_iter_global: int = 40
+    keep_best: bool = True
+    batched: bool | None = None  # None: auto by a.ndim
+    # -- dictionary route --
+    dict_y: Any = None
+    dict_gamma0: Any = None
+    dict_sparse_coding: Callable[[Array, Array], Array] | None = None
+
+
+@dataclasses.dataclass
+class FactorizeInfo:
+    """Everything a ``factorize`` run learned beyond the operator itself."""
+
+    strategy: str
+    batched: bool
+    ops: list[FaustOp]  # per-matrix operators (len 1 unless batched)
+    fausts: list[Faust]  # optimization-side chains
+    blockfausts: list[BlockFaust] | None = None  # block route only
+    hierarchical: HierarchicalInfo | None = None
+    loss_history: Array | None = None  # flat palm4msa route
+    gamma: Array | None = None  # dictionary route
+
+
+def _finish(
+    strategy: str,
+    batched: bool,
+    fausts: list[Faust],
+    *,
+    blockfausts: list[BlockFaust] | None = None,
+    hierarchical: HierarchicalInfo | None = None,
+    loss_history: Array | None = None,
+    gamma: Array | None = None,
+) -> tuple[FaustOp, FactorizeInfo]:
+    reps = blockfausts if blockfausts is not None else fausts
+    ops = [FaustOp.wrap(r) for r in reps]
+    info = FactorizeInfo(
+        strategy=strategy,
+        batched=batched,
+        ops=ops,
+        fausts=fausts,
+        blockfausts=blockfausts,
+        hierarchical=hierarchical,
+        loss_history=loss_history,
+        gamma=gamma,
+    )
+    op = ops[0] if len(ops) == 1 else block_diag(ops)
+    return op, info
+
+
+# ---------------------------------------------------------------------------
+# Block-granular route (the former compress_matrix[_batched] bodies)
+# ---------------------------------------------------------------------------
+
+
+def _factorize_block_single(
+    w: Array,
+    n_factors: int,
+    bk: int,
+    bn: int,
+    k_first: int,
+    k_mid: int,
+    k_resid: Sequence[int] | None = None,
+    n_iter_two: int = 40,
+    n_iter_global: int = 40,
+) -> tuple[BlockFaust, Faust, HierarchicalInfo]:
+    """Factorize a dense ``W (in, out)`` into a deployment BlockFaust.
+
+    Orientation (the paper's MEG setting wants square residuals on the
+    small side of W): ``out < in`` factorizes A := Wᵀ with per-block-row
+    budgets (chain F_i = S_iᵀ); otherwise A := W right-to-left with
+    per-block-column budgets.  See ``core.compress._compress_spec``.
+    """
+    assert bk == bn, "block route requires square blocks (see DESIGN.md)"
+    in_f, out_f = w.shape
+    wp = _pad_to_multiple(w, bk, bn)
+    transpose = wp.shape[1] < wp.shape[0]  # out < in
+    a = wp.T if transpose else wp  # (m, n) with m ≤ n
+    spec = _compress_spec(
+        a.shape, transpose, n_factors, bk, bn, k_first, k_mid, k_resid,
+        n_iter_two, n_iter_global,
+    )
+    faust, info = hierarchical_factorization(a, spec)
+    bfaust = _faust_to_blockfaust(faust, transpose, bk, bn, in_f, out_f)
+    return bfaust, faust, info
+
+
+def _factorize_block_batched(
+    ws: Array,
+    n_factors: int,
+    bk: int,
+    bn: int,
+    k_first: int,
+    k_mid: int,
+    k_resid: Sequence[int] | None = None,
+    n_iter_two: int = 40,
+    n_iter_global: int = 40,
+) -> tuple[list[BlockFaust], list[Faust], HierarchicalInfo]:
+    """Block route over a stack ``ws (B, in, out)``: every hierarchical
+    (split, refine) step is one ``palm4msa_batched`` solve for the whole
+    stack — one compile regardless of B, per-matrix parity with the
+    sequential route to fp tolerance."""
+    assert bk == bn, "block route requires square blocks"
+    assert ws.ndim == 3, f"expected (B, in, out); got {ws.shape}"
+    in_f, out_f = ws.shape[1:]
+    pi, po = (-in_f) % bk, (-out_f) % bn
+    wp = jnp.pad(ws, ((0, 0), (0, pi), (0, po))) if (pi or po) else ws
+    transpose = wp.shape[2] < wp.shape[1]  # out < in
+    a = jnp.swapaxes(wp, 1, 2) if transpose else wp  # (B, m, n), m ≤ n
+    spec = _compress_spec(
+        a.shape[1:], transpose, n_factors, bk, bn, k_first, k_mid, k_resid,
+        n_iter_two, n_iter_global,
+    )
+    fausts, info = hierarchical_factorization_batched(a, spec)
+    bfausts = [
+        _faust_to_blockfaust(f, transpose, bk, bn, in_f, out_f) for f in fausts
+    ]
+    return bfausts, fausts, info
+
+
+# ---------------------------------------------------------------------------
+# The front door
+# ---------------------------------------------------------------------------
+
+
+def factorize(a: Array, spec: FactorizeSpec) -> tuple[FaustOp, FactorizeInfo]:
+    """Factorize ``a`` (2-D, or 3-D ``(B, m, n)`` for a batched stack)
+    into a FAµST operator.  See the module docstring for routing."""
+    if spec.strategy not in STRATEGIES:
+        raise ValueError(
+            f"strategy must be one of {STRATEGIES}; got {spec.strategy!r}"
+        )
+    a = jnp.asarray(a)
+    if a.ndim not in (2, 3):
+        raise ValueError(f"expected (m, n) or (B, m, n); got {a.shape}")
+    batched = a.ndim == 3 if spec.batched is None else spec.batched
+    if batched and a.ndim != 3:
+        raise ValueError(f"batched=True expects (B, m, n); got {a.shape}")
+    if not batched and a.ndim == 3:
+        raise ValueError(
+            "batched=False cannot solve a 3-D stack in one call; loop "
+            "factorize over the matrices instead (or drop batched=False — "
+            f"a {a.shape} stack batches automatically)"
+        )
+
+    if spec.strategy == "palm4msa":
+        return _route_palm(a, spec, batched)
+    if spec.strategy == "dictionary":
+        if a.ndim != 2:
+            raise ValueError(
+                "strategy='dictionary' takes a single 2-D initial "
+                f"dictionary; got {a.shape} (the dictionary route has no "
+                "batched solver)"
+            )
+        return _route_dictionary(a, spec)
+
+    if spec.strategy == "hadamard":
+        n = a.shape[-1]
+        hier = hadamard_spec(
+            n, spec.n_iter_two, spec.n_iter_global,
+            constraints=spec.constraints, init=spec.init,
+        )
+    elif spec.strategy == "meg":
+        m, n = a.shape[-2:]
+        hier = meg_style_spec(
+            m, n, spec.n_factors, spec.k, spec.s if spec.s is not None else 4 * m,
+            rho=spec.rho, n_iter_two=spec.n_iter_two,
+            n_iter_global=spec.n_iter_global,
+        )
+    else:  # "hierarchical"
+        hier = spec.hier
+        if hier is None:
+            if spec.block is None:
+                raise ValueError(
+                    "strategy='hierarchical' needs spec.hier (an explicit "
+                    "HierarchicalSpec) or spec.block (the block-granular "
+                    "deployment route)"
+                )
+            return _route_block(a, spec, batched)
+
+    if batched:
+        fausts, info = hierarchical_factorization_batched(a, hier)
+    else:
+        faust, info = hierarchical_factorization(a, hier)
+        fausts = [faust]
+    return _finish(spec.strategy, batched, fausts, hierarchical=info)
+
+
+def _route_block(a, spec: FactorizeSpec, batched: bool):
+    kw = dict(
+        n_factors=spec.n_factors, bk=spec.block, bn=spec.block,
+        k_first=spec.k_first, k_mid=spec.k_mid, k_resid=spec.k_resid,
+        n_iter_two=spec.n_iter_two, n_iter_global=spec.n_iter_global,
+    )
+    if batched:
+        bfs, fausts, info = _factorize_block_batched(a, **kw)
+    else:
+        bf, faust, info = _factorize_block_single(a, **kw)
+        bfs, fausts = [bf], [faust]
+    return _finish(
+        spec.strategy, batched, fausts, blockfausts=bfs, hierarchical=info
+    )
+
+
+def _route_palm(a, spec: FactorizeSpec, batched: bool):
+    if spec.projs is None or spec.dims is None:
+        raise ValueError("strategy='palm4msa' needs spec.projs and spec.dims")
+    factors, lam = default_init(spec.dims, dtype=a.dtype)
+    if batched:
+        b = a.shape[0]
+        factors = tuple(
+            jnp.broadcast_to(f, (b,) + f.shape) for f in factors
+        )
+        res = palm4msa_batched(
+            a, factors, lam, spec.projs, spec.n_iter, keep_best=spec.keep_best
+        )
+        fausts = [
+            Faust(tuple(f[i] for f in res.factors), res.lam[i])
+            for i in range(b)
+        ]
+    else:
+        res = palm4msa(
+            a, factors, lam, spec.projs, spec.n_iter, keep_best=spec.keep_best
+        )
+        fausts = [Faust(res.factors, res.lam)]
+    return _finish(
+        spec.strategy, batched, fausts, loss_history=res.loss_history
+    )
+
+
+def _route_dictionary(a, spec: FactorizeSpec):
+    if spec.hier is None or spec.dict_y is None or (
+        spec.dict_gamma0 is None or spec.dict_sparse_coding is None
+    ):
+        raise ValueError(
+            "strategy='dictionary' needs spec.hier, dict_y, dict_gamma0 "
+            "and dict_sparse_coding"
+        )
+    faust, gamma, info = hierarchical_dictionary(
+        spec.dict_y, a, spec.dict_gamma0, spec.hier, spec.dict_sparse_coding
+    )
+    return _finish(
+        spec.strategy, False, [faust], hierarchical=info, gamma=gamma
+    )

@@ -15,23 +15,19 @@ so that ``y[:, o·bn:(o+1)·bn] = Σ_j  x[:, in_idx[o,j]·bk : +bk] @ values[o,j
 The gather-on-input/no-scatter layout means one kernel program owns one
 output block — the TPU-friendly shape (DESIGN.md §3).
 
-``compress_matrix`` turns a trained dense weight into this format with the
-paper's hierarchical algorithm using block-granular constraint sets; random
-prescribed-support initialization (for training FAµSTs from scratch) lives
-here too.
-
-Workload-scale compression (EXPERIMENTS.md §Batched compression):
-``compress_matrix_batched`` solves a stack of same-shaped weights with the
-batched PALM4MSA engine (one compile, one dispatch per hierarchical step);
-``compress_layers`` buckets a named weight collection by shape and batches
-each bucket (optionally sharded over a mesh axis); ``compress_model`` walks
-a ``configs/``-built model's parameter pytree and feeds every eligible 2-D
-weight through that pipeline, returning per-layer :class:`BlockFaust` chains
-ready for :func:`pack_chain` + the ``faust_linear`` serving path.
+Dense→FAµST factorization moved behind the unified front door
+:func:`repro.api.factorize` (see EXPERIMENTS.md §Operator API).  This
+module keeps the *formats* (pack/unpack, random prescribed-support init)
+plus the shared orientation/constraint helpers the block route uses, the
+workload drivers (``compress_layers`` / ``compress_model`` — thin
+wrappers bucketing named weights into ``factorize`` calls, optionally
+mesh-sharded), and one-release deprecation shims for the old
+``compress_matrix[_batched]`` entry points.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, Sequence
 
 import jax
@@ -40,12 +36,7 @@ import numpy as np
 
 from repro.core import projections as P
 from repro.core.faust import Faust
-from repro.core.hierarchical import (
-    HierarchicalInfo,
-    HierarchicalSpec,
-    hierarchical_factorization,
-    hierarchical_factorization_batched,
-)
+from repro.core.hierarchical import HierarchicalInfo, HierarchicalSpec
 
 Array = jax.Array
 
@@ -244,7 +235,7 @@ def pack_chain(bfaust: BlockFaust) -> PackedChain:
     Requires uniform square blocks and a contiguous chain (each factor's
     padded output domain is exactly the next factor's padded input domain)
     — both hold for every factor produced by :func:`random_block_factor`
-    with one block size or by :func:`compress_matrix`.  Raises
+    with one block size or by the ``repro.api.factorize`` block route.  Raises
     ``ValueError`` otherwise; callers fall back to the per-factor path.
     """
     factors = bfaust.factors
@@ -278,6 +269,27 @@ def pack_chain(bfaust: BlockFaust) -> PackedChain:
         [f.in_idx.reshape(-1).astype(jnp.int32) for f in factors]
     )
     return PackedChain(values, in_idx, bfaust.lam, plan)
+
+
+def unpack_chain(chain: PackedChain) -> BlockFaust:
+    """Inverse of :func:`pack_chain`: recover the per-factor
+    :class:`BlockFaust` from the flat-packed layout (pure reshapes/slices
+    driven by the plan's offset metadata — no repacking heuristics)."""
+    plan = chain.plan
+    blk = plan.block
+    factors = []
+    for j in range(plan.n_factors):
+        o, k = plan.out_blocks[j], plan.k_blocks[j]
+        sl = slice(plan.offsets[j], plan.offsets[j + 1])
+        factors.append(
+            BlockSparseFactor(
+                chain.values[sl].reshape(o, k, blk, blk),
+                chain.in_idx[sl].reshape(o, k),
+                plan.in_feats[j],
+                plan.out_feats[j],
+            )
+        )
+    return BlockFaust(tuple(factors), chain.lam)
 
 
 # ---------------------------------------------------------------------------
@@ -348,6 +360,34 @@ def random_block_factor(
 # ---------------------------------------------------------------------------
 
 
+def _block_factorize_spec(
+    n_factors: int,
+    bk: int,
+    bn: int,
+    k_first: int,
+    k_mid: int,
+    k_resid: Sequence[int] | None,
+    n_iter_two: int,
+    n_iter_global: int,
+):
+    """The :class:`repro.api.factorize.FactorizeSpec` equivalent of the old
+    ``compress_matrix`` keyword surface (shared by the shims and the
+    workload drivers below)."""
+    from repro.api.factorize import FactorizeSpec
+
+    assert bk == bn, "the block route requires square blocks (see DESIGN.md)"
+    return FactorizeSpec(
+        strategy="hierarchical",
+        n_factors=n_factors,
+        block=bk,
+        k_first=k_first,
+        k_mid=k_mid,
+        k_resid=tuple(k_resid) if k_resid is not None else None,
+        n_iter_two=n_iter_two,
+        n_iter_global=n_iter_global,
+    )
+
+
 def compress_matrix(
     w: Array,
     n_factors: int,
@@ -359,35 +399,27 @@ def compress_matrix(
     n_iter_two: int = 40,
     n_iter_global: int = 40,
 ) -> tuple[BlockFaust, Faust]:
-    """Factorize a trained weight ``W (in, out)`` into a BlockFaust.
-
-    Orientation: the paper's MEG setting wants the *rightmost* factor to be
-    the rectangular one and the square residuals on the *small* side of W.
-
-      * out <  in: factorize A := Wᵀ (out, in).  Chain F_i = S_iᵀ, so a
-        per-block-ROW budget on each S becomes the per-block-column budget
-        the packed layout needs.
-      * out ≥ in: factorize A := W viewed right-to-left (chain F_i =
-        S_{J+1-i}, untransposed).  Budgets go per-block-COLUMN on each S.
-
-    The rectangular factor S_1 gets ``k_first`` blocks per budget line; the
-    square mid factors ``k_mid``; residual T_ℓ gets ``k_resid[ℓ-1]``
-    (default: geometric ρ=0.7 decay from half-dense, the paper's §V-A
-    schedule at block granularity). All constraints are the paper's
-    Prop.-A.1 projections on the block partition (DESIGN.md §3).
-    """
-    assert bk == bn, "compress_matrix requires square blocks (see DESIGN.md)"
-    in_f, out_f = w.shape
-    wp = _pad_to_multiple(w, bk, bn)
-    transpose = wp.shape[1] < wp.shape[0]  # out < in
-    a = wp.T if transpose else wp  # (m, n) with m ≤ n
-    spec = _compress_spec(
-        a.shape, transpose, n_factors, bk, bn, k_first, k_mid, k_resid,
-        n_iter_two, n_iter_global,
+    """Deprecated shim — use :func:`repro.api.factorize` with a block
+    :class:`~repro.api.factorize.FactorizeSpec` (this returns
+    ``(info.blockfausts[0], info.fausts[0])`` of that call; orientation
+    and constraint-schedule semantics are documented on
+    ``repro.api.factorize._factorize_block_single``)."""
+    warnings.warn(
+        "compress_matrix is deprecated; use repro.api.factorize(w, "
+        "FactorizeSpec(strategy='hierarchical', block=...)) instead",
+        DeprecationWarning,
+        stacklevel=2,
     )
-    faust, _ = hierarchical_factorization(a, spec)
-    bfaust = _faust_to_blockfaust(faust, transpose, bk, bn, in_f, out_f)
-    return bfaust, faust
+    from repro.api.factorize import factorize
+
+    _, info = factorize(
+        w,
+        _block_factorize_spec(
+            n_factors, bk, bn, k_first, k_mid, k_resid, n_iter_two,
+            n_iter_global,
+        ),
+    )
+    return info.blockfausts[0], info.fausts[0]
 
 
 def _compress_spec(
@@ -484,35 +516,29 @@ def compress_matrix_batched(
     n_iter_two: int = 40,
     n_iter_global: int = 40,
 ) -> tuple[list[BlockFaust], list[Faust], HierarchicalInfo]:
-    """:func:`compress_matrix` over a stack ``ws (B, in, out)`` of same-shaped
-    weights, solved by the batched hierarchical engine: every (split, refine)
-    step is one ``palm4msa_batched`` call for the whole stack, so the XLA
-    compile cost is paid once regardless of B and the solves run as batched
-    matmuls instead of B sequential dispatches.
-
-    Per-matrix outputs match ``compress_matrix(ws[i], ...)`` to fp tolerance
-    (the batched sweep is the vmapped sequential sweep; RE parity ≤ 1e-5 is
-    asserted by ``benchmarks/batch_compress.py``).  Returns per-matrix
-    :class:`BlockFaust`/:class:`Faust` lists plus the run's
-    :class:`~repro.core.hierarchical.HierarchicalInfo` (trace-cache
-    counters).
-    """
-    assert bk == bn, "compress_matrix_batched requires square blocks"
-    assert ws.ndim == 3, f"expected (B, in, out); got {ws.shape}"
-    in_f, out_f = ws.shape[1:]
-    pi, po = (-in_f) % bk, (-out_f) % bn
-    wp = jnp.pad(ws, ((0, 0), (0, pi), (0, po))) if (pi or po) else ws
-    transpose = wp.shape[2] < wp.shape[1]  # out < in
-    a = jnp.swapaxes(wp, 1, 2) if transpose else wp  # (B, m, n), m ≤ n
-    spec = _compress_spec(
-        a.shape[1:], transpose, n_factors, bk, bn, k_first, k_mid, k_resid,
-        n_iter_two, n_iter_global,
+    """Deprecated shim — :func:`repro.api.factorize` auto-batches a 3-D
+    ``(B, in, out)`` stack through the batched hierarchical engine (one
+    trace + one dispatch per (split, refine) step for the whole stack;
+    per-matrix parity with the sequential route to fp tolerance, asserted
+    by ``benchmarks/batch_compress.py``)."""
+    warnings.warn(
+        "compress_matrix_batched is deprecated; use repro.api.factorize(ws, "
+        "FactorizeSpec(strategy='hierarchical', block=...)) — a (B, in, out) "
+        "stack batches automatically",
+        DeprecationWarning,
+        stacklevel=2,
     )
-    fausts, info = hierarchical_factorization_batched(a, spec)
-    bfausts = [
-        _faust_to_blockfaust(f, transpose, bk, bn, in_f, out_f) for f in fausts
-    ]
-    return bfausts, fausts, info
+    from repro.api.factorize import factorize
+
+    assert ws.ndim == 3, f"expected (B, in, out); got {ws.shape}"
+    _, info = factorize(
+        ws,
+        _block_factorize_spec(
+            n_factors, bk, bn, k_first, k_mid, k_resid, n_iter_two,
+            n_iter_global,
+        ),
+    )
+    return info.blockfausts, info.fausts, info.hierarchical
 
 
 def _maybe_shard_batch(stack: Array, mesh, batch_axis: str) -> Array:
@@ -555,10 +581,10 @@ def compress_layers(
     (the ``models.lm`` per-layer kernel layout): stacks go to the batched
     solver *as-is* — no unstack/restack copy — and expand to ``name[i]``
     entries in the result.  2-D weights are bucketed by ``(shape, dtype)``;
-    each bucket of size > 1 is stacked and solved by
-    :func:`compress_matrix_batched` (one compile + one batched solve per
-    bucket), singletons fall back to :func:`compress_matrix` — which still
-    reuses traces across buckets of equal shape thanks to the
+    each bucket of size > 1 is stacked and solved by one batched
+    :func:`repro.api.factorize` call (one compile + one batched solve per
+    bucket), singletons fall back to a sequential ``factorize`` — which
+    still reuses traces across buckets of equal shape thanks to the
     value-hashable projection specs.
 
     ``mesh``: optional ``jax.sharding.Mesh``; when given, each stack is
@@ -571,30 +597,34 @@ def compress_layers(
     for :func:`pack_chain` /
     ``repro.layers.faust_linear.blockfaust_to_params``.
     """
-    kw = dict(
-        n_factors=n_factors, bk=bk, bn=bn, k_first=k_first, k_mid=k_mid,
-        k_resid=k_resid, n_iter_two=n_iter_two, n_iter_global=n_iter_global,
+    from repro.api.factorize import factorize
+
+    fspec = _block_factorize_spec(
+        n_factors, bk, bn, k_first, k_mid, k_resid, n_iter_two, n_iter_global
     )
     out: dict[str, BlockFaust] = {}
     buckets: dict[tuple, list[str]] = {}
     for name, w in sorted(weights.items()):
         if w.ndim == 3:  # pre-stacked (L, in, out): already the batch layout
             stack = _maybe_shard_batch(w, mesh, batch_axis)
-            bfausts, _, _ = compress_matrix_batched(stack, **kw)
-            out.update((f"{name}[{i}]", bf) for i, bf in enumerate(bfausts))
+            _, info = factorize(stack, fspec)
+            out.update(
+                (f"{name}[{i}]", bf) for i, bf in enumerate(info.blockfausts)
+            )
             continue
         assert w.ndim == 2, f"{name}: expected a 2-D or (L, in, out) weight, got {w.shape}"
         buckets.setdefault((tuple(w.shape), str(w.dtype)), []).append(name)
 
     for _, names in sorted(buckets.items(), key=lambda kv: kv[1][0]):
         if len(names) == 1:
-            out[names[0]], _ = compress_matrix(weights[names[0]], **kw)
+            _, info = factorize(weights[names[0]], fspec)
+            out[names[0]] = info.blockfausts[0]
             continue
         stack = _maybe_shard_batch(
             jnp.stack([weights[n] for n in names]), mesh, batch_axis
         )
-        bfausts, _, _ = compress_matrix_batched(stack, **kw)
-        out.update(zip(names, bfausts))
+        _, info = factorize(stack, fspec)
+        out.update(zip(names, info.blockfausts))
     return out
 
 

@@ -119,15 +119,16 @@ class Faust:
 
     # -- diagnostics ---------------------------------------------------------
     def rel_error_fro(self, a: Array) -> Array:
+        """Relative Frobenius error — a traced ``Array`` (jit-safe)."""
         return jnp.linalg.norm(a - self.todense()) / jnp.linalg.norm(a)
 
-    def rel_error_spec(self, a: Array) -> float:
-        """Relative operator-norm error (paper eq. (6))."""
+    def rel_error_spec(self, a: Array) -> Array:
+        """Relative operator-norm error (paper eq. (6)) — a traced
+        ``Array`` like :meth:`rel_error_fro` (both compose under jit;
+        call ``float(...)`` at eager call sites)."""
         from repro.core.lipschitz import spectral_norm
 
-        return float(
-            spectral_norm(a - self.todense()) / (spectral_norm(a) + 1e-30)
-        )
+        return spectral_norm(a - self.todense()) / (spectral_norm(a) + 1e-30)
 
 
 def identity_like(shape: tuple[int, int], dtype=jnp.float32) -> Array:

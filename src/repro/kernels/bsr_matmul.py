@@ -27,8 +27,8 @@ roofline terms.
 intermediate activations at every factor boundary when driven one launch per
 factor.  ``kernels/chain.py`` generalizes this kernel to the whole
 ``x @ F_1 @ ... @ F_J`` product in a single ``pallas_call`` (this kernel is
-its J = 1 special case); prefer ``blockfaust_apply(..., fuse=True)`` for
-multi-factor chains.
+its J = 1 special case); prefer ``repro.api.FaustOp.apply(x,
+backend="fused")`` (or ``packed_chain_apply``) for multi-factor chains.
 """
 from __future__ import annotations
 

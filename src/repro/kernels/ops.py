@@ -1,12 +1,15 @@
 """Jit'd wrappers around the block-sparse FAµST apply.
 
 ``bsr_apply``          — single factor, ref or Pallas path, padding handled.
-``blockfaust_apply``   — full chain ``y = lam · x@F_1@...@F_J``; with
-                         ``fuse=True`` the whole chain is one ``pallas_call``
-                         (``kernels/chain.py``) instead of J launches.
-``packed_chain_apply`` — the fused apply on a pre-packed
-                         :class:`~repro.core.compress.PackedChain` (skips
-                         re-flattening per call).
+``blockfaust_apply``   — full chain ``y = lam · x@F_1@...@F_J``, one launch
+                         per factor.
+``packed_chain_apply`` — the whole chain as one ``pallas_call``
+                         (``kernels/chain.py``) on a pre-packed
+                         :class:`~repro.core.compress.PackedChain`.
+
+These are the kernel-level entry points; backend *selection* (dense vs
+per-factor vs fused, cost-model driven) lives one level up in
+``repro.api`` (``FaustOp.apply(x, backend=...)``).
 
 Both Pallas paths carry a ``custom_vjp`` whose backward pass uses the
 gather/scatter einsum forms from ``ref.py`` (identical to XLA's autodiff of
@@ -18,6 +21,7 @@ checkpoint-style recompute keeps the memory win).
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -210,18 +214,25 @@ def blockfaust_apply(
     use_kernel: bool = False,
     bt: int = 128,
     interpret: bool = False,
-    fuse: bool = False,
+    fuse: bool | None = None,
 ) -> Array:
-    """Full FAµST chain apply (the paper's O(s_tot) multiplication).
+    """Full FAµST chain apply (the paper's O(s_tot) multiplication),
+    iterating per-factor applies.
 
-    ``fuse=True`` routes through the packed-chain path (requires uniform
-    square blocks and a contiguous chain — everything ``FaustSpec``/
-    ``compress_matrix`` produce): with ``use_kernel=True`` that is the fused
-    single-``pallas_call`` chain kernel; with the default
-    ``use_kernel=False`` it is the step-exact jnp oracle (no Pallas — the
-    CPU-safe default, same as the per-factor path).  The default iterates
-    per-factor applies.
+    ``fuse`` is a deprecated alias of the packed-chain path — backend
+    selection lives in ``repro.api``: use
+    ``FaustOp.apply(x, backend="fused")`` (or ``backend="auto"`` for the
+    cost-model choice), or :func:`packed_chain_apply` on a pre-packed
+    chain at kernel level.
     """
+    if fuse is not None:
+        warnings.warn(
+            "blockfaust_apply(fuse=...) is deprecated; use "
+            "repro.api.FaustOp.apply(x, backend='fused'|'auto') or "
+            "packed_chain_apply",
+            DeprecationWarning,
+            stacklevel=2,
+        )
     if fuse:
         return packed_chain_apply(
             x, pack_chain(bfaust), use_kernel=use_kernel, bt=bt, interpret=interpret

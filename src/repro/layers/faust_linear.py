@@ -21,12 +21,13 @@ which the model owns.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
 
+from repro.api.operator import FaustOp
 from repro.core.compress import BlockFaust, BlockSparseFactor, random_block_factor
-from repro.kernels.ops import blockfaust_apply
 from repro.layers.param import annotate
 
 Array = jax.Array
@@ -106,23 +107,32 @@ def faust_linear_apply(
     in_dim: int,
     out_dim: int,
     *,
-    use_kernel: bool = False,
-    fuse: bool = False,
+    backend: str = "auto",
+    use_kernel: bool | None = None,
+    fuse: bool | None = None,
 ) -> Array:
-    """Apply the FAµST projection.  ``fuse=True`` routes through the packed
-    chain (``repro.kernels.chain``) — always valid for ``FaustSpec`` chains
-    (uniform square blocks).  With ``use_kernel=True`` (TPU) that is the
-    fused single-``pallas_call`` kernel, which wins whenever the
-    intermediate activation traffic ``2·tokens·Σ_j d_j`` is a visible
-    fraction of the weight traffic ``s_tot``, i.e. small-batch inference;
-    with the CPU-safe default ``use_kernel=False`` it is the step-exact jnp
-    oracle of the same packed format."""
-    return blockfaust_apply(
-        x,
-        params_to_blockfaust(p, spec, in_dim, out_dim),
-        use_kernel=use_kernel,
-        fuse=fuse,
-    )
+    """Apply the FAµST projection through the unified operator layer.
+
+    ``backend`` is the :meth:`repro.api.FaustOp.apply` backend:
+    ``"auto"`` (default) lets the roofline cost model pick dense vs
+    per-factor vs fused per (batch, shape, dtype) — the fused
+    single-``pallas_call`` chain wins whenever the intermediate activation
+    traffic ``2·tokens·Σ_j d_j`` is a visible fraction of the weight
+    traffic ``s_tot``, i.e. small-batch inference.  ``use_kernel=None``
+    auto-selects Pallas on TPU and the CPU-safe jnp reference paths
+    elsewhere.  ``fuse`` is a deprecated alias for
+    ``backend="fused"/"bsr"``.
+    """
+    if fuse is not None:
+        warnings.warn(
+            "faust_linear_apply(fuse=...) is deprecated; pass "
+            "backend='fused'|'bsr'|'auto' instead",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        backend = "fused" if fuse else "bsr"
+    op = FaustOp.from_blockfaust(params_to_blockfaust(p, spec, in_dim, out_dim))
+    return op.apply(x, backend=backend, use_kernel=use_kernel)
 
 
 def blockfaust_to_params(bf: BlockFaust) -> dict:
@@ -139,29 +149,40 @@ def blockfaust_to_params(bf: BlockFaust) -> dict:
     return {"factors": factors, "lam": annotate(bf.lam)}
 
 
+def _factorize_spec(spec: FaustSpec, n_iter_two: int, n_iter_global: int):
+    from repro.api.factorize import FactorizeSpec
+
+    return FactorizeSpec(
+        strategy="hierarchical",
+        n_factors=spec.n_factors,
+        block=spec.block,
+        k_first=spec.k,
+        k_mid=spec.k,
+        n_iter_two=n_iter_two,
+        n_iter_global=n_iter_global,
+    )
+
+
 def from_dense(
     w: Array,
     spec: FaustSpec,
     n_iter_two: int = 40,
     n_iter_global: int = 40,
 ) -> dict:
-    """Compress a trained dense kernel into FaustLinear params (the paper's
-    hierarchical factorization with block constraints). The resulting packed
-    ``k`` may differ from ``spec.k``; callers should rebuild the spec from
-    the returned factors if needed."""
-    from repro.core.compress import compress_matrix
-
-    bf, _ = compress_matrix(
-        w,
-        n_factors=spec.n_factors,
-        bk=spec.block,
-        bn=spec.block,
-        k_first=spec.k,
-        k_mid=spec.k,
-        n_iter_two=n_iter_two,
-        n_iter_global=n_iter_global,
+    """Deprecated shim — ``repro.api.factorize`` + :func:`blockfaust_to_params`
+    (the paper's hierarchical factorization with block constraints).  The
+    resulting packed ``k`` may differ from ``spec.k``; callers should
+    rebuild the spec from the returned factors if needed."""
+    warnings.warn(
+        "from_dense is deprecated; use repro.api.factorize(w, spec) + "
+        "blockfaust_to_params(info.blockfausts[0])",
+        DeprecationWarning,
+        stacklevel=2,
     )
-    return blockfaust_to_params(bf)
+    from repro.api.factorize import factorize
+
+    _, info = factorize(w, _factorize_spec(spec, n_iter_two, n_iter_global))
+    return blockfaust_to_params(info.blockfausts[0])
 
 
 def from_dense_batched(
@@ -170,21 +191,16 @@ def from_dense_batched(
     n_iter_two: int = 40,
     n_iter_global: int = 40,
 ) -> list[dict]:
-    """:func:`from_dense` over a stack ``ws (B, in, out)`` of same-shaped
-    kernels, solved by the batched PALM4MSA engine — one compile and one
-    batched hierarchical solve for the whole stack (every same-shaped linear
-    layer of a model in one shot) instead of B sequential factorizations.
-    Returns one param dict per kernel."""
-    from repro.core.compress import compress_matrix_batched
-
-    bfs, _, _ = compress_matrix_batched(
-        ws,
-        n_factors=spec.n_factors,
-        bk=spec.block,
-        bn=spec.block,
-        k_first=spec.k,
-        k_mid=spec.k,
-        n_iter_two=n_iter_two,
-        n_iter_global=n_iter_global,
+    """Deprecated shim — :func:`from_dense` over a stack ``ws (B, in, out)``;
+    ``repro.api.factorize`` batches a 3-D stack automatically (one compile
+    and one batched hierarchical solve for the whole stack)."""
+    warnings.warn(
+        "from_dense_batched is deprecated; use repro.api.factorize(ws, spec) "
+        "— a (B, in, out) stack batches automatically",
+        DeprecationWarning,
+        stacklevel=2,
     )
-    return [blockfaust_to_params(bf) for bf in bfs]
+    from repro.api.factorize import factorize
+
+    _, info = factorize(ws, _factorize_spec(spec, n_iter_two, n_iter_global))
+    return [blockfaust_to_params(bf) for bf in info.blockfausts]

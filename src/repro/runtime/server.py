@@ -4,6 +4,13 @@ Request model: a batch of prompts (equal length after left-padding by the
 caller — the static-shape serving pattern), one prefill pass fills the
 caches, then token-by-token decode. Decode sharding follows
 ``cfg.decode_policy()`` (SP decode: cache sequence on 'model').
+
+FAµST-parameterized models (``cfg.faust_mlp``/``cfg.faust_unembed``)
+route their projections through ``repro.api.FaustOp.apply(backend=
+"auto")`` inside the jitted steps; the last backend decision staged
+while tracing the serving computations — the decode step's, the
+steady-state path — is captured on :class:`ServeStats`
+(``faust_dispatch``) so operators can see which kernel path is serving.
 """
 from __future__ import annotations
 
@@ -29,6 +36,9 @@ class ServeStats:
     prefill_s: float = 0.0
     decode_s: float = 0.0
     tokens_decoded: int = 0
+    # last FAµST backend decision staged into the serving computations
+    # (None when the model has no FAµST-parameterized projections)
+    faust_dispatch: Any = None
 
     @property
     def tokens_per_s(self) -> float:
@@ -38,6 +48,9 @@ class ServeStats:
 class Server:
     def __init__(self, cfg: ArchConfig, params, max_len: int, mesh: Mesh | None = None):
         self.cfg, self.params, self.max_len, self.mesh = cfg, params, max_len, mesh
+        # dispatch only runs at trace time — remember the decision from the
+        # first (cold) generate() so warm-cache calls still report it
+        self._faust_dispatch = None
 
         def _prefill(params, batch, caches):
             with shd.use_rules(mesh, cfg.decode_policy()):
@@ -64,6 +77,9 @@ class Server:
             cfg, b, self.max_len,
             dtype=jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32,
         )
+        from repro.api import dispatch as _dispatch
+
+        mark = _dispatch.last_report()
         t0 = time.monotonic()
         logits, caches = self.prefill_fn(self.params, batch, caches)
         logits.block_until_ready()
@@ -80,5 +96,10 @@ class Server:
         jax.block_until_ready(tok)
         stats.decode_s = time.monotonic() - t0
         stats.tokens_decoded = b * (n_new_tokens - 1)
+        if _dispatch.last_report() is not mark:  # a FAµST layer dispatched
+            # decode traces after prefill, so this is the decode-step
+            # decision (the steady-state serving path) when both ran
+            self._faust_dispatch = _dispatch.last_report()
+        stats.faust_dispatch = self._faust_dispatch
         gen = np.concatenate(outs, axis=-1)
         return gen, stats

@@ -1,0 +1,115 @@
+"""One-release deprecation shims: the old entry points still work and
+emit ``DeprecationWarning``, and their outputs match the new API.
+
+Old surface → new surface:
+  compress_matrix[_batched]        → repro.api.factorize (block route)
+  from_dense[_batched]             → factorize + blockfaust_to_params
+  blockfaust_apply(fuse=...)       → FaustOp.apply(backend=...)
+  faust_linear_apply(fuse=...)     → faust_linear_apply(backend=...)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import FactorizeSpec, factorize
+from repro.core.compress import (
+    BlockFaust,
+    compress_matrix,
+    compress_matrix_batched,
+    random_block_factor,
+)
+from repro.kernels.ops import blockfaust_apply
+from repro.layers.faust_linear import (
+    FaustSpec,
+    blockfaust_to_params,
+    faust_linear_apply,
+    faust_linear_init,
+    from_dense,
+    from_dense_batched,
+)
+from repro.layers.param import split_annotations
+
+jax.config.update("jax_platform_name", "cpu")
+
+_SPEC = dict(n_factors=2, bk=8, bn=8, k_first=3, k_mid=2,
+             n_iter_two=8, n_iter_global=8)
+_FSPEC = FactorizeSpec(n_factors=2, block=8, k_first=3, k_mid=2,
+                       n_iter_two=8, n_iter_global=8)
+
+
+def _w(seed=0, shape=(32, 48)):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape) * 0.05
+
+
+def test_compress_matrix_shim_warns_and_matches():
+    w = _w()
+    with pytest.warns(DeprecationWarning, match="factorize"):
+        bf, faust = compress_matrix(w, **_SPEC)
+    op, info = factorize(w, _FSPEC)
+    assert isinstance(bf, BlockFaust)
+    np.testing.assert_array_equal(np.asarray(bf.todense()),
+                                  np.asarray(op.todense()))
+    np.testing.assert_array_equal(np.asarray(faust.todense()),
+                                  np.asarray(info.fausts[0].todense()))
+
+
+def test_compress_matrix_batched_shim_warns_and_matches():
+    ws = jnp.stack([_w(1), _w(2)])
+    with pytest.warns(DeprecationWarning, match="batches automatically"):
+        bfs, fausts, hinfo = compress_matrix_batched(ws, **_SPEC)
+    _, info = factorize(ws, _FSPEC)
+    assert len(bfs) == len(fausts) == 2 and hinfo is not None
+    for bf, op in zip(bfs, info.ops):
+        np.testing.assert_array_equal(np.asarray(bf.todense()),
+                                      np.asarray(op.todense()))
+
+
+def test_from_dense_shims_warn_and_match():
+    w = _w(3)
+    spec = FaustSpec(n_factors=2, block=8, k=2)
+    with pytest.warns(DeprecationWarning, match="factorize"):
+        p = from_dense(w, spec, n_iter_two=8, n_iter_global=8)
+    _, info = factorize(
+        w, FactorizeSpec(n_factors=2, block=8, k_first=2, k_mid=2,
+                         n_iter_two=8, n_iter_global=8),
+    )
+    want, _ = split_annotations(blockfaust_to_params(info.blockfausts[0]))
+    p, _ = split_annotations(p)
+    np.testing.assert_array_equal(np.asarray(p["lam"]), np.asarray(want["lam"]))
+    for got_f, want_f in zip(p["factors"], want["factors"]):
+        np.testing.assert_array_equal(np.asarray(got_f["values"]),
+                                      np.asarray(want_f["values"]))
+    with pytest.warns(DeprecationWarning, match="batches automatically"):
+        ps = from_dense_batched(jnp.stack([w, _w(4)]), spec,
+                                n_iter_two=8, n_iter_global=8)
+    assert len(ps) == 2
+
+
+def test_blockfaust_apply_fuse_warns_and_matches():
+    keys = jax.random.split(jax.random.PRNGKey(5), 2)
+    bf = BlockFaust(
+        (random_block_factor(keys[0], 32, 32, 8, 8, 2),
+         random_block_factor(keys[1], 32, 48, 8, 8, 2)),
+        jnp.asarray(1.2),
+    )
+    x = jax.random.normal(jax.random.PRNGKey(6), (4, 32))
+    want = blockfaust_apply(x, bf)  # no fuse= → no warning
+    for flag in (True, False):
+        with pytest.warns(DeprecationWarning, match="backend"):
+            got = blockfaust_apply(x, bf, fuse=flag)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_faust_linear_apply_fuse_warns_and_matches():
+    spec = FaustSpec(n_factors=2, block=8, k=2)
+    ann = faust_linear_init(jax.random.PRNGKey(7), 32, 48, spec)
+    p, _ = split_annotations(ann)
+    x = jax.random.normal(jax.random.PRNGKey(8), (4, 32))
+    want = faust_linear_apply(p, x, spec, 32, 48, backend="bsr")
+    for flag in (True, False):
+        with pytest.warns(DeprecationWarning, match="backend"):
+            got = faust_linear_apply(p, x, spec, 32, 48, fuse=flag)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)

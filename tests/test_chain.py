@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.api import FaustOp
 from repro.core.compress import (
     BlockFaust,
     pack_chain,
@@ -54,9 +55,10 @@ def test_fused_matches_ref_and_perfactor(n_factors, dtype):
     counts = [4, 6, 3, 5, 4][: n_factors + 1]
     bf = _rand_chain(n_factors, counts, dtype=dtype)
     x = jax.random.normal(jax.random.PRNGKey(99), (9, counts[0] * 8), dtype=dtype)
+    op = FaustOp.from_blockfaust(bf)
     want = blockfaust_apply(x, bf, use_kernel=False)
-    got_ref = blockfaust_apply(x, bf, fuse=True, use_kernel=False)
-    got_kern = blockfaust_apply(x, bf, fuse=True, use_kernel=True, bt=8, interpret=True)
+    got_ref = op.apply(x, backend="fused", use_kernel=False)
+    got_kern = op.apply(x, backend="fused", use_kernel=True, bt=8, interpret=True)
     tol = 1e-5 if dtype == jnp.float32 else 3e-2
     for got in (got_ref, got_kern):
         np.testing.assert_allclose(
@@ -75,7 +77,9 @@ def test_fused_rel_frobenius_vs_dense(n_factors):
     w = np.asarray(bf.todense())
     x = jax.random.normal(jax.random.PRNGKey(1), (16, counts[0] * 8))
     got = np.asarray(
-        blockfaust_apply(x, bf, fuse=True, use_kernel=True, bt=8, interpret=True)
+        FaustOp.from_blockfaust(bf).apply(
+            x, backend="fused", use_kernel=True, bt=8, interpret=True
+        )
     )
     want = np.asarray(x) @ w
     rel = np.linalg.norm(got - want) / np.linalg.norm(want)
@@ -93,7 +97,9 @@ def test_fused_ragged_feature_dims():
     )
     x = jnp.asarray(rng.normal(size=(5, 20)).astype(np.float32))
     want = blockfaust_apply(x, bf, use_kernel=False)
-    got = blockfaust_apply(x, bf, fuse=True, use_kernel=True, bt=8, interpret=True)
+    got = FaustOp.from_blockfaust(bf).apply(
+        x, backend="fused", use_kernel=True, bt=8, interpret=True
+    )
     assert got.shape == (5, 13)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
     # and against the dense product
@@ -110,7 +116,9 @@ def test_fused_ragged_random_factors_match_perfactor():
     bf = BlockFaust((f1, f2), jnp.asarray(1.1, jnp.float32))
     x = jax.random.normal(jax.random.PRNGKey(6), (7, 20))
     want = blockfaust_apply(x, bf, use_kernel=False)
-    got = blockfaust_apply(x, bf, fuse=True, use_kernel=True, bt=8, interpret=True)
+    got = FaustOp.from_blockfaust(bf).apply(
+        x, backend="fused", use_kernel=True, bt=8, interpret=True
+    )
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
 
 
@@ -118,7 +126,9 @@ def test_fused_leading_batch_dims_and_batch_padding():
     bf = _rand_chain(3, [4, 5, 4])
     x = jax.random.normal(jax.random.PRNGKey(7), (2, 3, 32))  # 6 rows, bt=8
     want = blockfaust_apply(x, bf, use_kernel=False)
-    got = blockfaust_apply(x, bf, fuse=True, use_kernel=True, bt=8, interpret=True)
+    got = FaustOp.from_blockfaust(bf).apply(
+        x, backend="fused", use_kernel=True, bt=8, interpret=True
+    )
     assert got.shape == want.shape
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
 

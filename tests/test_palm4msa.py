@@ -241,7 +241,7 @@ def test_meg_style_tradeoff_small():
             m, n, n_factors=3, k=k, s=8 * m, n_iter_two=60, n_iter_global=60
         )
         faust, _ = hierarchical_factorization(a, spec)
-        results.append((k, faust.rel_error_spec(a), faust.rcg()))
+        results.append((k, float(faust.rel_error_spec(a)), faust.rcg()))
     (k_lo, re_lo, rcg_lo), (k_hi, re_hi, rcg_hi) = results
     assert rcg_lo > rcg_hi > 1.2, results  # sparser ⇒ higher gain
     assert re_hi < re_lo < 0.5, results  # denser ⇒ lower error

@@ -20,14 +20,33 @@ tracked across PRs, e.g.::
   batch_compress      — §II-B amortization at workload scale (batched vs
                         sequential factorization; EXPERIMENTS.md §Batched
                         compression)
+  shard_scaling       — mesh-sharded vs single-device fused apply
+                        (debug mesh via CPU host-device override;
+                        EXPERIMENTS.md §Sharded apply)
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 import traceback
+
+
+def _force_host_devices(n: int = 8) -> None:
+    """Give the CPU host ``n`` devices so the shard_map benchmarks run on
+    every machine.  Must happen before the first jax import (hence here,
+    not in the benchmark modules); a no-op when the flag is already set,
+    and it only affects the *host* platform — TPU runs are untouched.
+    Applied only when shard_scaling is among the selected benchmarks, so
+    `--only apply_speed`-style timing runs keep their historical
+    single-device environment."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={n}"
+        ).strip()
 
 
 def main() -> None:
@@ -41,6 +60,9 @@ def main() -> None:
     )
     args = ap.parse_args()
 
+    requested = args.only.split(",") if args.only else None
+    if requested is None or "shard_scaling" in requested:
+        _force_host_devices()
     from benchmarks import (
         apply_speed,
         batch_compress,
@@ -48,6 +70,7 @@ def main() -> None:
         denoising,
         hadamard,
         meg_tradeoff,
+        shard_scaling,
         source_localization,
         svd_comparison,
     )
@@ -60,6 +83,7 @@ def main() -> None:
         "denoising": denoising.run,
         "apply_speed": apply_speed.run,
         "batch_compress": batch_compress.run,
+        "shard_scaling": shard_scaling.run,
     }
     names = args.only.split(",") if args.only else list(table)
     print("name,us_per_call,derived")

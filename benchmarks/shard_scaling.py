@@ -1,0 +1,133 @@
+"""Sharded vs single-device fused FAµST apply on a debug mesh.
+
+Measures the mesh-sharded execution layer (``kernels/chain_sharded.py``,
+``FaustOp.apply(backend="fused_sharded")``) against the single-device
+fused chain on a ``make_debug_mesh`` — on CPU the mesh comes from the
+host-device-count override (``benchmarks/run.py`` sets it before the
+first jax import; this module does the same when run standalone), so the
+collective/shard_map paths run on every machine, not just when a TPU is
+attached.  Wall times off-TPU are smoke-value only (same caveat as
+``apply_speed``); the load-bearing columns are:
+
+* ``parity`` — sharded output == single-device fused to ≤ 1e-6 (hard gate);
+* the attached :class:`DispatchReport` — mesh shape, per-shard ICI
+  collective bytes, and the modeled µs of every candidate backend;
+* ``hbm_weight_mb_*`` — per-shard weight traffic, the term the model-axis
+  partition divides by ``n_model`` (EXPERIMENTS.md §Sharded apply).
+
+Two support patterns bracket the collective spectrum:
+
+* ``local``  — every out-block gathers in-blocks of its own shard
+  (butterfly-stage layout): one fused launch per shard, zero collectives;
+* ``crossing`` — random supports: every factor boundary all-gathers.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+if "jax" not in sys.modules:  # standalone: force a multi-device CPU host
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            _flags + " --xla_force_host_platform_device_count=8"
+        ).strip()
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit_us
+from repro.api import FaustOp, ShardSpec, last_report
+from repro.core.compress import BlockFaust, BlockSparseFactor, random_block_factor
+from repro.kernels import chain_sharded as cs
+from repro.launch.mesh import make_debug_mesh
+
+PARITY_GATE = 1e-6
+
+
+def _rel(a, b) -> float:
+    a, b = np.asarray(a, np.float64), np.asarray(b, np.float64)
+    return float(np.linalg.norm(a - b) / max(np.linalg.norm(b), 1e-30))
+
+
+def _local_support_chain(nb, blk, k, n_model, n_factors, seed=0):
+    """Supports confined to each model shard's block range (the layout of
+    a butterfly stage): shardable with zero collectives."""
+    per = nb // n_model
+    rng = np.random.default_rng(seed)
+    factors = []
+    for _ in range(n_factors):
+        idx = np.stack([
+            np.sort(rng.choice(per, size=min(k, per), replace=False))
+            + (o // per) * per
+            for o in range(nb)
+        ]).astype(np.int32)
+        vals = 0.2 * rng.normal(size=(nb, min(k, per), blk, blk)).astype(
+            np.float32
+        )
+        factors.append(
+            BlockSparseFactor(jnp.asarray(vals), jnp.asarray(idx),
+                              nb * blk, nb * blk)
+        )
+    return BlockFaust(tuple(factors), jnp.asarray(1.0, jnp.float32))
+
+
+def _crossing_chain(nb, blk, k, n_factors, seed=1):
+    keys = jax.random.split(jax.random.PRNGKey(seed), n_factors)
+    factors = tuple(
+        random_block_factor(keys[i], nb * blk, nb * blk, blk, blk, k)
+        for i in range(n_factors)
+    )
+    return BlockFaust(factors, jnp.asarray(1.0, jnp.float32))
+
+
+def run(nb: int = 8, blk: int = 32, k: int = 4, n_factors: int = 3,
+        batch: int = 64) -> None:
+    n_dev = len(jax.devices())
+    n_data, n_model = (2, 2) if n_dev >= 4 else (1, 1)
+    mesh = make_debug_mesh(n_data, n_model)
+    shard = ShardSpec(mesh)
+    cases = {
+        "local": _local_support_chain(nb, blk, k, max(n_model, 1), n_factors),
+        "crossing": _crossing_chain(nb, blk, k, n_factors),
+    }
+    for name, bf in cases.items():
+        op = FaustOp.wrap(bf)
+        sop = op.with_sharding(shard)
+        x = jax.random.normal(jax.random.PRNGKey(2), (batch, bf.in_features))
+
+        fused_fn = jax.jit(lambda v: op.apply(v, backend="fused",
+                                              use_kernel=False))
+        sharded_fn = jax.jit(lambda v: sop.apply(v, backend="fused_sharded",
+                                                 use_kernel=False))
+        y_fused, y_sharded = fused_fn(x), sharded_fn(x)
+        report = last_report()  # the fused_sharded trace's decision record
+        parity = _rel(y_sharded, y_fused)
+        if parity > PARITY_GATE:
+            raise RuntimeError(
+                f"shard_scaling[{name}]: parity {parity:.3e} > {PARITY_GATE}"
+            )
+        t_fused = timeit_us(fused_fn, x)
+        t_sharded = timeit_us(sharded_fn, x)
+
+        plan = cs.plan_shard(bf, mesh)
+        elt = 4  # f32
+        hbm_single = elt * bf.s_tot
+        hbm_shard = hbm_single // (n_model if plan.mode == "model" else 1)
+        coll = plan.collective_bytes(batch, elt)
+        emit(
+            f"shard_{name}_{bf.in_features}x{bf.out_features}_J{n_factors}",
+            t_sharded,
+            f"fused_us={t_fused:.1f};mode={plan.mode};"
+            f"mesh={n_data}x{n_model};segments={plan.n_launches};"
+            f"parity={parity:.1e};collective_bytes={coll};"
+            f"hbm_weight_mb_single={hbm_single / 1e6:.2f};"
+            f"hbm_weight_mb_per_shard={hbm_shard / 1e6:.2f};"
+            f"s_tot={bf.s_tot}",
+            dispatch=report,
+        )
+
+
+if __name__ == "__main__":
+    run()

@@ -57,4 +57,21 @@ if [ "$failed" -gt "$SEED_FAILED" ] || [ "$errors" -gt "$SEED_ERRORS" ]; then
     echo "ci: WORSE THAN SEED"
     exit 1
 fi
+
+# Multi-device leg: the shard_map/collective paths (tests/test_sharded_apply.py
+# skips itself on a single-device host), run under the CPU host-device-count
+# override so they execute on every push, not just when a TPU is attached.
+mdout=$(XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
+        PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout "$CI_TIMEOUT" \
+        python -m pytest -q tests/test_sharded_apply.py tests/test_sharding.py 2>&1)
+mdstatus=$?
+echo "$mdout" | tail -3
+if [ "$mdstatus" -eq 124 ]; then
+    echo "ci: MULTI-DEVICE LEG TIMEOUT after ${CI_TIMEOUT}s"
+    exit 124
+elif [ "$mdstatus" -ne 0 ]; then
+    echo "ci: MULTI-DEVICE LEG FAILED"
+    exit "$mdstatus"
+fi
+echo "ci: multi-device leg OK"
 exit "$status"

@@ -12,6 +12,7 @@ from repro.api.factorize import (
 )
 from repro.api.operator import (
     FaustOp,
+    ShardSpec,
     block_diag,
     hstack,
     vstack,
@@ -22,6 +23,7 @@ __all__ = [
     "FactorizeInfo",
     "FactorizeSpec",
     "FaustOp",
+    "ShardSpec",
     "block_diag",
     "choose_backend",
     "factorize",

@@ -19,6 +19,13 @@ compiled ground truth):
   activation through HBM); J launches.
 * ``fused``:  flops ``2·b·s_tot``;     bytes ``s_tot + b·(m+n)``
   (intermediates stay in VMEM scratch); 1 launch.
+* ``fused_sharded``: the fused chain per mesh shard
+  (``kernels/chain_sharded.py``) — per-shard flops/HBM terms divide by the
+  shard counts, plus a **collective** term ``ici_bytes / LINK_BW`` for the
+  boundary all-gathers where the support pattern crosses block shards,
+  and one launch per chain segment.  Only feasible when the operator
+  carries a :class:`~repro.api.operator.ShardSpec` (see
+  EXPERIMENTS.md §Sharded apply).
 
 Every decision is materialized as a :class:`DispatchReport` — benchmarks
 record it next to their numbers (``benchmarks/run.py --json``) and tests
@@ -34,7 +41,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+from repro.launch.roofline import HBM_BW, LINK_BW, PEAK_FLOPS
 
 # Fixed per-launch overhead (µs).  Breaks roofline ties in favor of
 # fewer launches — the structural argument for the fused chain at small
@@ -56,10 +63,13 @@ class DispatchReport:
     feasible: tuple[str, ...]
     est_us: dict  # backend -> modeled µs (feasible backends only)
     reason: str
+    # mesh facts (None / 0 when the operator carries no ShardSpec)
+    mesh_shape: tuple | None = None  # ((axis, size), ...) of the target mesh
+    collective_bytes: int = 0  # per-shard ICI bytes of the sharded plan
 
     def as_row(self) -> dict:
         """Flat JSON-ready form for benchmark rows."""
-        return {
+        row = {
             "backend": self.backend,
             "requested": self.requested,
             "batch": self.batch,
@@ -70,6 +80,10 @@ class DispatchReport:
             "est_us": {k: round(v, 3) for k, v in self.est_us.items()},
             "reason": self.reason,
         }
+        if self.mesh_shape is not None:
+            row["mesh_shape"] = {a: s for a, s in self.mesh_shape}
+            row["collective_bytes"] = self.collective_bytes
+        return row
 
 
 _LAST_REPORT: DispatchReport | None = None
@@ -97,20 +111,27 @@ def choose_backend(
     n_factors: int = 1,
     feasible: tuple[str, ...] = ("dense", "bsr", "fused"),
     requested: str = "auto",
+    shard: dict | None = None,
 ) -> DispatchReport:
     """Pick the cheapest feasible backend under the roofline model.
 
     Pure function of its arguments (device is recorded, not consulted):
     the same operator/batch always dispatches the same way, so benchmark
-    rows are comparable across hosts.
+    rows are comparable across hosts.  ``shard`` is the
+    :meth:`repro.kernels.chain_sharded.ShardPlan.summary` of the operator's
+    mesh plan — when given, ``fused_sharded`` joins the priced backends
+    with per-shard roofline terms plus the ICI collective term.
     """
     m, n = shape
     b = batch
     elt = jnp.dtype(dtype).itemsize
 
-    def roofline_us(flops: float, byts: float, launches: int) -> float:
+    def roofline_us(
+        flops: float, byts: float, launches: int, coll_bytes: float = 0.0
+    ) -> float:
         return (
-            max(flops / PEAK_FLOPS, byts / HBM_BW) * 1e6
+            (max(flops / PEAK_FLOPS, byts / HBM_BW) + coll_bytes / LINK_BW)
+            * 1e6
             + launches * LAUNCH_US
         )
 
@@ -130,9 +151,15 @@ def choose_backend(
         ),
         "fused": roofline_us(2.0 * b * s_tot, elt * (s_tot + edge), 1),
     }
+    coll_bytes = 0
+    if shard is not None and "fused_sharded" in feasible:
+        est["fused_sharded"], coll_bytes = _sharded_est(
+            roofline_us, b, m, n, s_tot, elt, shard, inner_dims
+        )
     est = {k: v for k, v in est.items() if k in feasible}
     # stable preference on ties: fewest-launch structured path first
-    order = {"fused": 0, "bsr": 1, "dense": 2}
+    # (single-device fused before sharded — a tie means the mesh buys nothing)
+    order = {"fused": 0, "fused_sharded": 1, "bsr": 2, "dense": 3}
     backend = min(est, key=lambda k: (est[k], order[k]))
     runner_up = min(
         (k for k in est if k != backend),
@@ -147,6 +174,12 @@ def choose_backend(
             f"{runner_up} {est[runner_up]:.2f}us "
             f"(batch={b}, s_tot={s_tot}, dense_nnz={m * n})"
         )
+    if shard is not None and "fused_sharded" in est:
+        reason += (
+            f"; sharded plan: {shard['mode']}, "
+            f"{shard['n_segments']} segment(s), "
+            f"{coll_bytes} ICI bytes/shard"
+        )
     return DispatchReport(
         requested=requested,
         backend=backend,
@@ -158,17 +191,67 @@ def choose_backend(
         feasible=tuple(est),
         est_us=est,
         reason=reason,
+        mesh_shape=shard.get("mesh_shape") if shard is not None else None,
+        collective_bytes=coll_bytes,
     )
 
 
-def dispatch(op, batch: int, dtype, requested: str = "auto") -> DispatchReport:
+def _sharded_est(
+    roofline_us, b: int, m: int, n: int, s_tot: int, elt: int, shard: dict,
+    inner_dims: tuple[int, ...] = (),
+) -> tuple[float, int]:
+    """Model the sharded fused apply: per-shard roofline + ICI collectives.
+
+    ``model`` mode: each of the ``n_model`` shards streams ``s_tot/n_model``
+    weights and ``b_loc·(m + n/n_model)`` edge activations per apply, pays
+    the per-shard all-gather receive bytes of every crossing boundary over
+    ICI (:func:`repro.kernels.chain_sharded.ici_bytes` — the same
+    accounting the executed plan reports), re-writes/re-reads the gathered
+    activation around each boundary, and launches once per chain segment.
+    ``replicated`` mode is pure DP: full weight traffic per shard, batch
+    divided over every fitting axis, no collectives — and when the chain
+    is *not* fusable (``shard["fusable"]`` False) the fallback really runs
+    one launch per factor with the per-factor activation round-trips, so
+    it is priced like ``bsr``, not like the fused kernel.
+    """
+    from repro.kernels.chain_sharded import ici_bytes
+
+    n_model = max(int(shard.get("n_model", 1)), 1)
+    n_data = max(int(shard.get("n_data", 1)), 1)
+    launches = int(shard.get("n_segments", 1))
+    if shard.get("mode") == "model":
+        b_loc = -(-b // n_data)
+        cross = tuple(shard.get("crossing_feats", ()))
+        coll_bytes = ici_bytes(b, elt, n_data, n_model, cross)
+        boundary_hbm = elt * b_loc * sum(w * (1 + 1 / n_model) for w in cross)
+        flops = 2.0 * b_loc * s_tot / n_model
+        byts = (
+            elt * (s_tot / n_model + b_loc * (m + n / n_model)) + boundary_hbm
+        )
+    else:
+        b_loc = -(-b // (n_data * n_model))
+        coll_bytes = 0
+        flops = 2.0 * b_loc * s_tot
+        byts = elt * (s_tot + b_loc * (m + n))
+        if not shard.get("fusable", True):
+            # per-factor reference fallback: every boundary activation
+            # round-trips through HBM, one launch per factor
+            byts += elt * 2 * b_loc * sum(inner_dims)
+    return roofline_us(flops, byts, launches, coll_bytes), coll_bytes
+
+
+def dispatch(
+    op, batch: int, dtype, requested: str = "auto", shard: dict | None = None
+) -> DispatchReport:
     """Decide (or record) the backend for one *leaf* operator.
 
     ``requested="auto"`` runs the cost model; a concrete backend name is
     a caller override — the report still carries the model's estimates
     (and what it *would* have picked, in ``reason``) but ``backend`` is
-    the forced one.  Composite operators dispatch per leaf during
-    ``apply``; :func:`last_report` returns the latest decision either way.
+    the forced one.  ``shard`` is the operator's
+    :meth:`~repro.kernels.chain_sharded.ShardPlan.summary` when it carries
+    a ShardSpec.  Composite operators dispatch per leaf during ``apply``;
+    :func:`last_report` returns the latest decision either way.
     """
     report = choose_backend(
         batch=batch,
@@ -179,6 +262,7 @@ def dispatch(op, batch: int, dtype, requested: str = "auto") -> DispatchReport:
         n_factors=op.n_factors,
         feasible=op.feasible_backends(),
         requested=requested,
+        shard=shard,
     )
     if requested != "auto":
         report = dataclasses.replace(

@@ -52,7 +52,7 @@ from typing import Any, Callable, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.api.operator import FaustOp, block_diag
+from repro.api.operator import FaustOp, ShardSpec, block_diag
 from repro.core.compress import (
     BlockFaust,
     _compress_spec,
@@ -74,6 +74,12 @@ from repro.core.palm4msa import palm4msa, palm4msa_batched
 Array = jax.Array
 
 STRATEGIES = ("hierarchical", "palm4msa", "hadamard", "meg", "dictionary")
+
+
+def _shard_of(spec: "FactorizeSpec") -> ShardSpec | None:
+    if spec.mesh is None:
+        return None
+    return ShardSpec(spec.mesh, spec.data_axis, spec.model_axis)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -111,6 +117,14 @@ class FactorizeSpec:
     n_iter_global: int = 40
     keep_best: bool = True
     batched: bool | None = None  # None: auto by a.ndim
+    # -- mesh placement (compressed layers come out pre-sharded) --
+    # mesh: factor arrays are device_put by out-block over `model_axis`
+    # (where counts divide; _fit_axes replication semantics otherwise) and
+    # every returned op carries a ShardSpec, so apply(backend="auto") can
+    # price and run the fused_sharded path immediately.
+    mesh: Any = None  # jax.sharding.Mesh | None
+    data_axis: str = "data"
+    model_axis: str = "model"
     # -- dictionary route --
     dict_y: Any = None
     dict_gamma0: Any = None
@@ -140,9 +154,19 @@ def _finish(
     hierarchical: HierarchicalInfo | None = None,
     loss_history: Array | None = None,
     gamma: Array | None = None,
+    shard: ShardSpec | None = None,
 ) -> tuple[FaustOp, FactorizeInfo]:
+    if shard is not None and blockfausts is not None:
+        from repro.kernels.chain_sharded import place_blockfaust
+
+        blockfausts = [
+            place_blockfaust(bf, shard.mesh, shard.model_axis)
+            for bf in blockfausts
+        ]
     reps = blockfausts if blockfausts is not None else fausts
     ops = [FaustOp.wrap(r) for r in reps]
+    if shard is not None:
+        ops = [o.with_sharding(shard) for o in ops]
     info = FactorizeInfo(
         strategy=strategy,
         batched=batched,
@@ -292,7 +316,10 @@ def factorize(a: Array, spec: FactorizeSpec) -> tuple[FaustOp, FactorizeInfo]:
     else:
         faust, info = hierarchical_factorization(a, hier)
         fausts = [faust]
-    return _finish(spec.strategy, batched, fausts, hierarchical=info)
+    return _finish(
+        spec.strategy, batched, fausts, hierarchical=info,
+        shard=_shard_of(spec),
+    )
 
 
 def _route_block(a, spec: FactorizeSpec, batched: bool):
@@ -307,7 +334,8 @@ def _route_block(a, spec: FactorizeSpec, batched: bool):
         bf, faust, info = _factorize_block_single(a, **kw)
         bfs, fausts = [bf], [faust]
     return _finish(
-        spec.strategy, batched, fausts, blockfausts=bfs, hierarchical=info
+        spec.strategy, batched, fausts, blockfausts=bfs, hierarchical=info,
+        shard=_shard_of(spec),
     )
 
 
@@ -333,7 +361,8 @@ def _route_palm(a, spec: FactorizeSpec, batched: bool):
         )
         fausts = [Faust(res.factors, res.lam)]
     return _finish(
-        spec.strategy, batched, fausts, loss_history=res.loss_history
+        spec.strategy, batched, fausts, loss_history=res.loss_history,
+        shard=_shard_of(spec),
     )
 
 
@@ -349,5 +378,6 @@ def _route_dictionary(a, spec: FactorizeSpec):
         spec.dict_y, a, spec.dict_gamma0, spec.hier, spec.dict_sparse_coding
     )
     return _finish(
-        spec.strategy, False, [faust], hierarchical=info, gamma=gamma
+        spec.strategy, False, [faust], hierarchical=info, gamma=gamma,
+        shard=_shard_of(spec),
     )

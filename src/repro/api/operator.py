@@ -30,6 +30,11 @@ operator algebra on top (nothing is materialized or transposed until you
   ``_faust_to_blockfaust`` at the call-site level).
 * ``op.s_tot`` / ``op.rcg`` — the paper's complexity accounting
   (Definition II.1), summed over leaves.
+* ``op.with_sharding(ShardSpec(mesh))`` — mesh placement metadata: batch
+  shards over ``'data'``, factor out-blocks partition over ``'model'``,
+  and ``apply`` gains the ``"fused_sharded"`` backend
+  (``repro.kernels.chain_sharded``; ``backend="auto"`` prices it with
+  collective terms — see EXPERIMENTS.md §Sharded apply).
 
 ``FaustOp`` is a frozen pytree: it jits/vmaps/grads like any parameter
 structure (the static node kind/adjoint flags travel as aux data).
@@ -56,7 +61,25 @@ Array = jax.Array
 
 _LEAF_REPS = (Faust, BlockFaust, PackedChain)
 _FORMATS = ("faust", "block", "packed")
-BACKENDS = ("auto", "dense", "bsr", "fused")
+BACKENDS = ("auto", "dense", "bsr", "fused", "fused_sharded")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardSpec:
+    """How a FaustOp lives on a device mesh.
+
+    ``data_axis`` shards the apply batch (pure DP, no collectives);
+    ``model_axis`` partitions every factor's *out-blocks* (each shard
+    streams ``s_tot / n_model`` weight bytes; boundary all-gathers appear
+    only where the support pattern crosses block shards — see
+    ``repro.kernels.chain_sharded``).  Hashable (the mesh is), so the spec
+    travels as pytree aux data / static jit state like the rest of the
+    operator's structure.  Attach with :meth:`FaustOp.with_sharding`.
+    """
+
+    mesh: "jax.sharding.Mesh"
+    data_axis: str = "data"
+    model_axis: str = "model"
 
 
 def _conj_rep(rep):
@@ -76,9 +99,14 @@ _PACK_CACHE_MAX = 64
 
 
 def _cached_pack(bf: BlockFaust) -> "PackedChain":
-    if isinstance(bf.lam, jax.core.Tracer) or any(
-        isinstance(f.values, jax.core.Tracer) for f in bf.factors
-    ):
+    # Under ANY active trace the pack's concatenates bind into that trace
+    # and return tracers even when every input is a closed-over constant —
+    # caching those would leak them into later traces (observed as an
+    # UnexpectedTracerError when a second jit reused the entry).  Checking
+    # the inputs alone is therefore not enough; bail on a dirty trace state.
+    if not jax.core.trace_state_clean() or isinstance(
+        bf.lam, jax.core.Tracer
+    ) or any(isinstance(f.values, jax.core.Tracer) for f in bf.factors):
         return pack_chain(bf)  # trace-time: packing is staged, not run
     import weakref
 
@@ -90,6 +118,29 @@ def _cached_pack(bf: BlockFaust) -> "PackedChain":
         _PACK_CACHE.pop(next(iter(_PACK_CACHE)))
     _PACK_CACHE[id(bf)] = (weakref.ref(bf), pc)
     return pc
+
+
+def _cached_unpack(pc: PackedChain) -> BlockFaust:
+    """Eager unpack cache (mirrors :func:`_cached_pack`): a sharded packed
+    leaf would otherwise re-slice its factors — and re-key the shard-plan
+    cache — on every apply."""
+    if not jax.core.trace_state_clean() or isinstance(
+        pc.values, jax.core.Tracer
+    ):
+        return unpack_chain(pc)
+    import weakref
+
+    ent = _UNPACK_CACHE.get(id(pc))
+    if ent is not None and ent[0]() is pc:
+        return ent[1]
+    bf = unpack_chain(pc)
+    if len(_UNPACK_CACHE) >= _PACK_CACHE_MAX:
+        _UNPACK_CACHE.pop(next(iter(_UNPACK_CACHE)))
+    _UNPACK_CACHE[id(pc)] = (weakref.ref(pc), bf)
+    return bf
+
+
+_UNPACK_CACHE: dict[int, tuple] = {}
 
 
 def _fusable(bf: BlockFaust) -> bool:
@@ -139,6 +190,7 @@ class FaustOp:
     children: tuple["FaustOp", ...]
     adjoint: bool = False
     conj: bool = False
+    shard: ShardSpec | None = None
 
     # NumPy must defer `ndarray @ op` to our __rmatmul__ instead of letting
     # its matmul gufunc claim (and fail on) the operator operand
@@ -146,12 +198,14 @@ class FaustOp:
 
     # -- pytree plumbing ---------------------------------------------------
     def tree_flatten(self):
-        return (self.rep, self.children), (self.kind, self.adjoint, self.conj)
+        return (self.rep, self.children), (
+            self.kind, self.adjoint, self.conj, self.shard,
+        )
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         rep, ch = children
-        return cls(aux[0], rep, tuple(ch), aux[1], aux[2])
+        return cls(aux[0], rep, tuple(ch), aux[1], aux[2], aux[3])
 
     # -- constructors ------------------------------------------------------
     @classmethod
@@ -237,7 +291,8 @@ class FaustOp:
     def _adj(self, conj: bool) -> "FaustOp":
         if self.kind == "leaf":
             return FaustOp(
-                "leaf", self.rep, (), not self.adjoint, self.conj ^ conj
+                "leaf", self.rep, (), not self.adjoint, self.conj ^ conj,
+                self.shard,
             )
         kids = tuple(c._adj(conj) for c in self.children)
         if self.kind == "compose":
@@ -247,6 +302,20 @@ class FaustOp:
         if self.kind == "hstack":
             return FaustOp("vstack", None, kids)
         return FaustOp("block_diag", None, kids)
+
+    def with_sharding(self, shard: ShardSpec | None) -> "FaustOp":
+        """Attach (or clear, with ``None``) a :class:`ShardSpec`.
+
+        Structural only — no array moves; pair with
+        :func:`repro.kernels.chain_sharded.place_blockfaust` (or
+        ``FactorizeSpec.mesh``) to also place the factor arrays.  Pushed
+        down to every leaf so composite operators dispatch each leaf on
+        the mesh."""
+        if self.kind == "leaf":
+            return dataclasses.replace(self, shard=shard)
+        return dataclasses.replace(
+            self, children=tuple(c.with_sharding(shard) for c in self.children)
+        )
 
     @property
     def T(self) -> "FaustOp":
@@ -326,7 +395,13 @@ class FaustOp:
           per-factor activation traffic dominates);
         * ``"bsr"``   — per-factor chain (one launch per factor);
         * ``"fused"`` — single-``pallas_call`` packed chain
-          (``kernels/chain.py``; forward of packable chains only).
+          (``kernels/chain.py``; forward of packable chains only);
+        * ``"fused_sharded"`` — the fused chain per mesh shard under
+          ``shard_map`` (``kernels/chain_sharded.py``; needs a
+          :class:`ShardSpec` — see :meth:`with_sharding`): factors
+          partitioned by out-block over ``model_axis``, batch over
+          ``data_axis``, all-gathers only at support-crossing factor
+          boundaries, replicated fallback when block counts don't divide.
 
         ``use_kernel=None`` auto-selects Pallas on TPU and the jnp
         reference paths elsewhere (CPU-safe); ``interpret`` likewise.
@@ -382,10 +457,37 @@ class FaustOp:
                 f"backend {backend!r} is not feasible for this leaf "
                 f"(feasible: {self.feasible_backends()})"
             )
+        # mesh plan first: the dispatch decision prices the exact plan that
+        # would run (collective bytes, segment count) and records the mesh.
+        # Only when the sharded path can actually be chosen — a forced
+        # non-sharded backend must not pay unpack/planning per call.
+        shard_plan, bf_sharded = None, None
+        if (
+            self.shard is not None
+            and backend in ("auto", "fused_sharded")
+            and "fused_sharded" in self.feasible_backends()
+        ):
+            from repro.kernels import chain_sharded as _cs
+
+            bf_sharded = rep if isinstance(rep, BlockFaust) else _cached_unpack(rep)
+            shard_plan = _cs.plan_shard(
+                bf_sharded, self.shard.mesh,
+                self.shard.data_axis, self.shard.model_axis,
+            )
         # auto and forced decisions both land on dispatch.last_report()
         backend = _dispatch.dispatch(
-            self, batch_of(x), x.dtype, requested=backend
+            self, batch_of(x), x.dtype, requested=backend,
+            shard=shard_plan.summary() if shard_plan is not None else None,
         ).backend
+        if backend == "fused_sharded":
+            from repro.kernels import chain_sharded as _cs
+
+            return _cs.sharded_chain_apply(
+                x, bf_sharded, self.shard.mesh,
+                self.shard.data_axis, self.shard.model_axis,
+                plan=shard_plan, use_kernel=use_kernel, bt=bt,
+                interpret=interpret,
+            )
         if backend == "dense":
             return x @ self.todense()
         if isinstance(rep, Faust):  # "bsr" = the per-factor chain
@@ -419,15 +521,18 @@ class FaustOp:
     # -- dispatch metadata (leaf-level; see repro.api.dispatch) -------------
     def feasible_backends(self) -> tuple[str, ...]:
         """Concrete backends this *leaf* can execute (adjoints have no
-        fused kernel; Faust leaves have no packed layout)."""
+        fused kernel; Faust leaves have no packed layout;
+        ``fused_sharded`` needs a :class:`ShardSpec` — attach one with
+        :meth:`with_sharding`)."""
         assert self.kind == "leaf", "feasible_backends is leaf-level"
         if isinstance(self.rep, Faust):
             return ("dense", "bsr")
         if self.adjoint:
             return ("dense", "bsr")
+        sharded = ("fused_sharded",) if self.shard is not None else ()
         if isinstance(self.rep, PackedChain) or _fusable(self.rep):
-            return ("dense", "bsr", "fused")
-        return ("dense", "bsr")
+            return ("dense", "bsr", "fused") + sharded
+        return ("dense", "bsr") + sharded
 
     def inner_dims(self) -> tuple[int, ...]:
         """Intermediate activation widths along the chain (the per-factor

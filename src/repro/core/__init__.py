@@ -5,8 +5,6 @@ from repro.core.compress import (
     BlockSparseFactor,
     PackedChain,
     compress_layers,
-    compress_matrix,
-    compress_matrix_batched,
     compress_model,
     pack_chain,
     pack_dense,
@@ -45,8 +43,6 @@ __all__ = [
     "HierarchicalSpec",
     "PalmResult",
     "compress_layers",
-    "compress_matrix",
-    "compress_matrix_batched",
     "compress_model",
     "default_init",
     "dense_flops",

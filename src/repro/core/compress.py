@@ -18,16 +18,14 @@ output block — the TPU-friendly shape (DESIGN.md §3).
 Dense→FAµST factorization moved behind the unified front door
 :func:`repro.api.factorize` (see EXPERIMENTS.md §Operator API).  This
 module keeps the *formats* (pack/unpack, random prescribed-support init)
-plus the shared orientation/constraint helpers the block route uses, the
-workload drivers (``compress_layers`` / ``compress_model`` — thin
+plus the shared orientation/constraint helpers the block route uses and
+the workload drivers (``compress_layers`` / ``compress_model`` — thin
 wrappers bucketing named weights into ``factorize`` calls, optionally
-mesh-sharded), and one-release deprecation shims for the old
-``compress_matrix[_batched]`` entry points.
+mesh-sharded).
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Callable, Sequence
 
 import jax
@@ -369,10 +367,15 @@ def _block_factorize_spec(
     k_resid: Sequence[int] | None,
     n_iter_two: int,
     n_iter_global: int,
+    mesh=None,
+    data_axis: str = "data",
+    model_axis: str = "model",
 ):
-    """The :class:`repro.api.factorize.FactorizeSpec` equivalent of the old
-    ``compress_matrix`` keyword surface (shared by the shims and the
-    workload drivers below)."""
+    """The :class:`repro.api.factorize.FactorizeSpec` for one block-route
+    compression request (shared by the workload drivers below).  ``mesh``
+    makes the factorized chains come out pre-sharded (factor arrays
+    placed by out-block over ``model_axis``, ops carrying a ShardSpec
+    whose apply batch shards over ``data_axis``)."""
     from repro.api.factorize import FactorizeSpec
 
     assert bk == bn, "the block route requires square blocks (see DESIGN.md)"
@@ -385,41 +388,10 @@ def _block_factorize_spec(
         k_resid=tuple(k_resid) if k_resid is not None else None,
         n_iter_two=n_iter_two,
         n_iter_global=n_iter_global,
+        mesh=mesh,
+        data_axis=data_axis,
+        model_axis=model_axis,
     )
-
-
-def compress_matrix(
-    w: Array,
-    n_factors: int,
-    bk: int,
-    bn: int,
-    k_first: int,
-    k_mid: int,
-    k_resid: Sequence[int] | None = None,
-    n_iter_two: int = 40,
-    n_iter_global: int = 40,
-) -> tuple[BlockFaust, Faust]:
-    """Deprecated shim — use :func:`repro.api.factorize` with a block
-    :class:`~repro.api.factorize.FactorizeSpec` (this returns
-    ``(info.blockfausts[0], info.fausts[0])`` of that call; orientation
-    and constraint-schedule semantics are documented on
-    ``repro.api.factorize._factorize_block_single``)."""
-    warnings.warn(
-        "compress_matrix is deprecated; use repro.api.factorize(w, "
-        "FactorizeSpec(strategy='hierarchical', block=...)) instead",
-        DeprecationWarning,
-        stacklevel=2,
-    )
-    from repro.api.factorize import factorize
-
-    _, info = factorize(
-        w,
-        _block_factorize_spec(
-            n_factors, bk, bn, k_first, k_mid, k_resid, n_iter_two,
-            n_iter_global,
-        ),
-    )
-    return info.blockfausts[0], info.fausts[0]
 
 
 def _compress_spec(
@@ -505,42 +477,6 @@ def _max_blocks_per_outcol(f: Array, bk: int, bn: int) -> int:
 # ---------------------------------------------------------------------------
 
 
-def compress_matrix_batched(
-    ws: Array,
-    n_factors: int,
-    bk: int,
-    bn: int,
-    k_first: int,
-    k_mid: int,
-    k_resid: Sequence[int] | None = None,
-    n_iter_two: int = 40,
-    n_iter_global: int = 40,
-) -> tuple[list[BlockFaust], list[Faust], HierarchicalInfo]:
-    """Deprecated shim — :func:`repro.api.factorize` auto-batches a 3-D
-    ``(B, in, out)`` stack through the batched hierarchical engine (one
-    trace + one dispatch per (split, refine) step for the whole stack;
-    per-matrix parity with the sequential route to fp tolerance, asserted
-    by ``benchmarks/batch_compress.py``)."""
-    warnings.warn(
-        "compress_matrix_batched is deprecated; use repro.api.factorize(ws, "
-        "FactorizeSpec(strategy='hierarchical', block=...)) — a (B, in, out) "
-        "stack batches automatically",
-        DeprecationWarning,
-        stacklevel=2,
-    )
-    from repro.api.factorize import factorize
-
-    assert ws.ndim == 3, f"expected (B, in, out); got {ws.shape}"
-    _, info = factorize(
-        ws,
-        _block_factorize_spec(
-            n_factors, bk, bn, k_first, k_mid, k_resid, n_iter_two,
-            n_iter_global,
-        ),
-    )
-    return info.blockfausts, info.fausts, info.hierarchical
-
-
 def _maybe_shard_batch(stack: Array, mesh, batch_axis: str) -> Array:
     """Shard a stack's leading (batch) dim over ``batch_axis`` when the mesh
     has that axis and it divides the batch evenly; otherwise leave default
@@ -573,6 +509,7 @@ def compress_layers(
     n_iter_global: int = 40,
     mesh=None,
     batch_axis: str = "data",
+    model_axis: str = "model",
 ) -> dict[str, BlockFaust]:
     """Compress a named collection of dense weights into per-layer
     :class:`BlockFaust` chains, batching same-shaped weights.
@@ -591,7 +528,10 @@ def compress_layers(
     placed with its batch dimension sharded over ``batch_axis`` (when that
     axis exists and divides the batch), so the batched solver's matmuls run
     under the mesh — each device owns a slice of the stack, the
-    layer-parallel compression mode.
+    layer-parallel compression mode — and the resulting chains come out
+    *pre-sharded*: factor arrays placed by out-block over ``model_axis``
+    (``_fit_axes`` replication fallback on non-dividing counts), ready for
+    the ``fused_sharded`` serving path (EXPERIMENTS.md §Sharded apply).
 
     The returned dict maps each input name to a :class:`BlockFaust` ready
     for :func:`pack_chain` /
@@ -599,8 +539,11 @@ def compress_layers(
     """
     from repro.api.factorize import factorize
 
+    # batch_axis doubles as the serving ShardSpec's data axis, so a mesh
+    # whose batch axis has a non-default name shards the apply batch too
     fspec = _block_factorize_spec(
-        n_factors, bk, bn, k_first, k_mid, k_resid, n_iter_two, n_iter_global
+        n_factors, bk, bn, k_first, k_mid, k_resid, n_iter_two, n_iter_global,
+        mesh=mesh, data_axis=batch_axis, model_axis=model_axis,
     )
     out: dict[str, BlockFaust] = {}
     buckets: dict[tuple, list[str]] = {}

@@ -147,8 +147,12 @@ def resolve_param_pspecs(axes_tree, shape_tree, mesh: Mesh, policy: ShardingPoli
         one,
         axes_tree,
         jax.tree_util.tree_map(lambda x: tuple(x.shape), shape_tree),
-        is_leaf=lambda x: isinstance(x, tuple) and all(
-            isinstance(a, (str, type(None))) for a in x
+        # None is a leaf meaning "fully replicated" (one() returns P());
+        # without marking it, tree_map would treat it as an empty subtree
+        # and fail to match the shape tree's tuple leaf
+        is_leaf=lambda x: x is None or (
+            isinstance(x, tuple)
+            and all(isinstance(a, (str, type(None))) for a in x)
         ),
     )
 

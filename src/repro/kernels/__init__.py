@@ -4,6 +4,10 @@
 ``chain.py``      — fused multi-factor chain: one launch for the whole
                     product, activations resident in VMEM (the general
                     subsystem; ``bsr_matmul`` is its J = 1 special case).
+``chain_sharded.py`` — the fused chain per mesh shard under ``shard_map``:
+                    factor out-blocks partition over ``'model'``, batch
+                    over ``'data'``, all-gathers only at support-crossing
+                    factor boundaries (EXPERIMENTS.md §Sharded apply).
 ``ops.py``        — jit'd wrappers + custom VJPs (the public API).
 ``ref.py``        — pure-jnp oracles (reference semantics + backward forms).
 """

@@ -21,13 +21,12 @@ checkpoint-style recompute keeps the memory win).
 from __future__ import annotations
 
 import functools
-import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.compress import BlockFaust, BlockSparseFactor, ChainPlan, PackedChain, pack_chain
+from repro.core.compress import BlockFaust, BlockSparseFactor, ChainPlan, PackedChain
 from repro.kernels import ref as _ref
 from repro.kernels.bsr_matmul import bsr_matmul
 from repro.kernels.chain import META_COLS, chain_matmul
@@ -214,29 +213,15 @@ def blockfaust_apply(
     use_kernel: bool = False,
     bt: int = 128,
     interpret: bool = False,
-    fuse: bool | None = None,
 ) -> Array:
     """Full FAµST chain apply (the paper's O(s_tot) multiplication),
     iterating per-factor applies.
 
-    ``fuse`` is a deprecated alias of the packed-chain path — backend
-    selection lives in ``repro.api``: use
+    Backend selection lives in ``repro.api``: use
     ``FaustOp.apply(x, backend="fused")`` (or ``backend="auto"`` for the
     cost-model choice), or :func:`packed_chain_apply` on a pre-packed
     chain at kernel level.
     """
-    if fuse is not None:
-        warnings.warn(
-            "blockfaust_apply(fuse=...) is deprecated; use "
-            "repro.api.FaustOp.apply(x, backend='fused'|'auto') or "
-            "packed_chain_apply",
-            DeprecationWarning,
-            stacklevel=2,
-        )
-    if fuse:
-        return packed_chain_apply(
-            x, pack_chain(bfaust), use_kernel=use_kernel, bt=bt, interpret=interpret
-        )
     y = x
     for f in bfaust.factors:
         y = bsr_apply(y, f, use_kernel=use_kernel, bt=bt, interpret=interpret)

@@ -7,26 +7,28 @@ Two ways to obtain it:
 * **train from scratch** (paper's *prescribed support* constraint set,
   Prop. A.1 with fixed support): random block supports chosen at init,
   values learned by SGD — ``faust_linear_init``;
-* **compress a trained dense weight** with hierarchical palm4MSA —
-  ``from_dense`` (used by ``examples/compress_operator.py`` and the
-  checkpoint-surgery path).
+* **compress a trained dense weight** with ``repro.api.factorize`` +
+  :func:`blockfaust_to_params` (used by ``examples/compress_operator.py``
+  and the checkpoint-surgery path).
 
 Apply cost is O(s_tot·tokens) instead of O(in·out·tokens): RCG transfers
 to the compute *and* memory roofline terms (§Perf).
 
 Params are pure arrays ({"factors": [{"values", "in_idx"}...], "lam"});
 the static layout (chain dims, block size) travels in :class:`FaustSpec`,
-which the model owns.
+which the model owns.  A spec may carry a
+:class:`~repro.api.operator.ShardSpec` — then every apply through this
+layer is mesh-native (the ``fused_sharded`` backend joins the dispatch
+candidates) without any signature change up the model stack.
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 
 import jax
 import jax.numpy as jnp
 
-from repro.api.operator import FaustOp
+from repro.api.operator import FaustOp, ShardSpec
 from repro.core.compress import BlockFaust, BlockSparseFactor, random_block_factor
 from repro.layers.param import annotate
 
@@ -38,12 +40,15 @@ class FaustSpec:
     """Static config for a FAµST-parameterized projection.
 
     ``n_factors`` chain length J; ``block`` square block side (128 on TPU);
-    ``k`` kept blocks per output block-column per factor.
+    ``k`` kept blocks per output block-column per factor; ``shard`` an
+    optional mesh placement — carried here (hashable, static) so model
+    configs make every FAµST projection shard-aware end to end.
     """
 
     n_factors: int = 2
     block: int = 128
     k: int = 4
+    shard: ShardSpec | None = None
 
     def chain_dims(self, in_dim: int, out_dim: int) -> list[int]:
         inner = min(in_dim, out_dim)
@@ -109,35 +114,31 @@ def faust_linear_apply(
     *,
     backend: str = "auto",
     use_kernel: bool | None = None,
-    fuse: bool | None = None,
+    shard: ShardSpec | None = None,
 ) -> Array:
     """Apply the FAµST projection through the unified operator layer.
 
     ``backend`` is the :meth:`repro.api.FaustOp.apply` backend:
     ``"auto"`` (default) lets the roofline cost model pick dense vs
-    per-factor vs fused per (batch, shape, dtype) — the fused
-    single-``pallas_call`` chain wins whenever the intermediate activation
-    traffic ``2·tokens·Σ_j d_j`` is a visible fraction of the weight
-    traffic ``s_tot``, i.e. small-batch inference.  ``use_kernel=None``
-    auto-selects Pallas on TPU and the CPU-safe jnp reference paths
-    elsewhere.  ``fuse`` is a deprecated alias for
-    ``backend="fused"/"bsr"``.
+    per-factor vs fused vs mesh-sharded per (batch, shape, dtype, mesh) —
+    the fused single-``pallas_call`` chain wins whenever the intermediate
+    activation traffic ``2·tokens·Σ_j d_j`` is a visible fraction of the
+    weight traffic ``s_tot``, i.e. small-batch inference; the sharded
+    variant additionally divides the per-shard weight traffic by the
+    model-axis size.  ``use_kernel=None`` auto-selects Pallas on TPU and
+    the CPU-safe jnp reference paths elsewhere.  ``shard`` overrides
+    ``spec.shard`` for this call.
     """
-    if fuse is not None:
-        warnings.warn(
-            "faust_linear_apply(fuse=...) is deprecated; pass "
-            "backend='fused'|'bsr'|'auto' instead",
-            DeprecationWarning,
-            stacklevel=2,
-        )
-        backend = "fused" if fuse else "bsr"
+    shard = shard if shard is not None else spec.shard
     op = FaustOp.from_blockfaust(params_to_blockfaust(p, spec, in_dim, out_dim))
+    if shard is not None:
+        op = op.with_sharding(shard)
     return op.apply(x, backend=backend, use_kernel=use_kernel)
 
 
 def blockfaust_to_params(bf: BlockFaust) -> dict:
     """Annotated FaustLinear params from a compressed :class:`BlockFaust` —
-    the bridge from the ``core.compress`` pipelines (``compress_matrix*``,
+    the bridge from the compression pipelines (``repro.api.factorize``,
     ``compress_layers``, ``compress_model``) into the serving layer."""
     factors = [
         {
@@ -149,7 +150,11 @@ def blockfaust_to_params(bf: BlockFaust) -> dict:
     return {"factors": factors, "lam": annotate(bf.lam)}
 
 
-def _factorize_spec(spec: FaustSpec, n_iter_two: int, n_iter_global: int):
+def factorize_spec(spec: FaustSpec, n_iter_two: int = 40, n_iter_global: int = 40):
+    """The :class:`repro.api.factorize.FactorizeSpec` that compresses a
+    dense weight into this layer's chain layout (mesh placement included
+    when ``spec.shard`` is set, so compressed layers come out pre-sharded).
+    Pair with ``factorize(w, ...)`` + :func:`blockfaust_to_params`."""
     from repro.api.factorize import FactorizeSpec
 
     return FactorizeSpec(
@@ -160,47 +165,7 @@ def _factorize_spec(spec: FaustSpec, n_iter_two: int, n_iter_global: int):
         k_mid=spec.k,
         n_iter_two=n_iter_two,
         n_iter_global=n_iter_global,
+        mesh=spec.shard.mesh if spec.shard is not None else None,
+        data_axis=spec.shard.data_axis if spec.shard is not None else "data",
+        model_axis=spec.shard.model_axis if spec.shard is not None else "model",
     )
-
-
-def from_dense(
-    w: Array,
-    spec: FaustSpec,
-    n_iter_two: int = 40,
-    n_iter_global: int = 40,
-) -> dict:
-    """Deprecated shim — ``repro.api.factorize`` + :func:`blockfaust_to_params`
-    (the paper's hierarchical factorization with block constraints).  The
-    resulting packed ``k`` may differ from ``spec.k``; callers should
-    rebuild the spec from the returned factors if needed."""
-    warnings.warn(
-        "from_dense is deprecated; use repro.api.factorize(w, spec) + "
-        "blockfaust_to_params(info.blockfausts[0])",
-        DeprecationWarning,
-        stacklevel=2,
-    )
-    from repro.api.factorize import factorize
-
-    _, info = factorize(w, _factorize_spec(spec, n_iter_two, n_iter_global))
-    return blockfaust_to_params(info.blockfausts[0])
-
-
-def from_dense_batched(
-    ws: Array,
-    spec: FaustSpec,
-    n_iter_two: int = 40,
-    n_iter_global: int = 40,
-) -> list[dict]:
-    """Deprecated shim — :func:`from_dense` over a stack ``ws (B, in, out)``;
-    ``repro.api.factorize`` batches a 3-D stack automatically (one compile
-    and one batched hierarchical solve for the whole stack)."""
-    warnings.warn(
-        "from_dense_batched is deprecated; use repro.api.factorize(ws, spec) "
-        "— a (B, in, out) stack batches automatically",
-        DeprecationWarning,
-        stacklevel=2,
-    )
-    from repro.api.factorize import factorize
-
-    _, info = factorize(ws, _factorize_spec(spec, n_iter_two, n_iter_global))
-    return [blockfaust_to_params(bf) for bf in info.blockfausts]

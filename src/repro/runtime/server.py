@@ -11,11 +11,14 @@ route their projections through ``repro.api.FaustOp.apply(backend=
 while tracing the serving computations — the decode step's, the
 steady-state path — is captured on :class:`ServeStats`
 (``faust_dispatch``) so operators can see which kernel path is serving.
+When the FaustSpecs carry a ShardSpec the decision can be
+``fused_sharded`` and the report carries the mesh shape and per-shard
+collective bytes; ``ServeStats.mesh_axes`` additionally records the
+serving mesh itself.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 from typing import Any
 
@@ -24,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
+from repro.api import dispatch as _dispatch
 from repro.configs.base import ArchConfig
 from repro.distributed import sharding as shd
 from repro.models import lm
@@ -39,6 +43,8 @@ class ServeStats:
     # last FAµST backend decision staged into the serving computations
     # (None when the model has no FAµST-parameterized projections)
     faust_dispatch: Any = None
+    # shard info: the serving mesh's {axis: size} (None off-mesh)
+    mesh_axes: dict | None = None
 
     @property
     def tokens_per_s(self) -> float:
@@ -77,8 +83,6 @@ class Server:
             cfg, b, self.max_len,
             dtype=jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32,
         )
-        from repro.api import dispatch as _dispatch
-
         mark = _dispatch.last_report()
         t0 = time.monotonic()
         logits, caches = self.prefill_fn(self.params, batch, caches)
@@ -101,5 +105,7 @@ class Server:
             # decision (the steady-state serving path) when both ran
             self._faust_dispatch = _dispatch.last_report()
         stats.faust_dispatch = self._faust_dispatch
+        if self.mesh is not None:
+            stats.mesh_axes = {str(a): int(s) for a, s in self.mesh.shape.items()}
         gen = np.concatenate(outs, axis=-1)
         return gen, stats

@@ -337,26 +337,51 @@ def test_factorize_hadamard_exact():
     assert info.hierarchical is not None and info.strategy == "hadamard"
 
 
-def test_factorize_block_route_matches_deprecated_shim():
+def test_factorize_block_route_is_canonical():
+    """The block route is the single entry point (the PR-3 deprecation
+    shims are gone): the returned operator, the info chains, and the layer
+    bridge all agree."""
     w = jax.random.normal(jax.random.PRNGKey(40), (32, 64)) * 0.05
     spec = FactorizeSpec(n_factors=2, block=8, k_first=3, k_mid=2,
                          n_iter_two=10, n_iter_global=10)
     op, info = factorize(w, spec)
     assert isinstance(op.rep, BlockFaust)
-    with pytest.warns(DeprecationWarning):
-        from repro.core.compress import compress_matrix
-
-        bf, faust = compress_matrix(
-            w, n_factors=2, bk=8, bn=8, k_first=3, k_mid=2,
-            n_iter_two=10, n_iter_global=10,
-        )
     np.testing.assert_allclose(
-        np.asarray(op.todense()), np.asarray(bf.todense()), rtol=0, atol=0
-    )
-    np.testing.assert_allclose(
-        np.asarray(info.fausts[0].todense()), np.asarray(faust.todense()),
+        np.asarray(op.todense()),
+        np.asarray(info.blockfausts[0].todense()),
         rtol=0, atol=0,
     )
+    # the old entry points no longer exist anywhere
+    import repro.core as core
+    import repro.core.compress as compress
+    import repro.layers.faust_linear as fl
+
+    for mod, name in [
+        (core, "compress_matrix"), (compress, "compress_matrix"),
+        (compress, "compress_matrix_batched"),
+        (fl, "from_dense"), (fl, "from_dense_batched"),
+    ]:
+        assert not hasattr(mod, name), f"{name} should have been removed"
+
+
+def test_faust_linear_apply_backend_parity():
+    """faust_linear_apply reproduces the same projection on every backend
+    (the coverage the removed fuse=-kwarg tests provided, on the new
+    surface)."""
+    from repro.layers.faust_linear import (
+        FaustSpec, faust_linear_apply, faust_linear_init,
+    )
+    from repro.layers.param import split_annotations
+
+    spec = FaustSpec(n_factors=2, block=8, k=2)
+    ann = faust_linear_init(jax.random.PRNGKey(7), 32, 48, spec)
+    p, _ = split_annotations(ann)
+    x = jax.random.normal(jax.random.PRNGKey(8), (4, 32))
+    want = faust_linear_apply(p, x, spec, 32, 48, backend="bsr")
+    for backend in ("fused", "dense", "auto"):
+        got = faust_linear_apply(p, x, spec, 32, 48, backend=backend)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
 
 
 def test_factorize_auto_batches_stacks():
@@ -431,3 +456,29 @@ def test_faustop_is_a_pytree(op_block):
     leaves, treedef = jax.tree_util.tree_flatten(op_block.T)
     rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
     assert rebuilt.adjoint and rebuilt.shape == op_block.shape[::-1]
+
+
+def test_pack_cache_not_poisoned_across_jits():
+    """Regression: packing inside one jit trace must not cache tracers for
+    the next jit (UnexpectedTracerError on main's apply_speed: the first
+    auto/fused trace cached a tracer-holding PackedChain because the
+    pack's concatenates bind into any active trace even with constant
+    inputs)."""
+    from repro.core.compress import random_block_factor
+
+    keys = jax.random.split(jax.random.PRNGKey(50), 2)
+    bf = BlockFaust(
+        (random_block_factor(keys[0], 32, 32, 8, 8, 2),
+         random_block_factor(keys[1], 32, 32, 8, 8, 2)),
+        jnp.asarray(1.0),
+    )
+    op = FaustOp.wrap(bf)
+    x = jax.random.normal(jax.random.PRNGKey(51), (4, 32))
+    f1 = jax.jit(lambda v: op.apply(v, backend="fused", use_kernel=False))
+    f2 = jax.jit(lambda v: 2.0 * op.apply(v, backend="fused", use_kernel=False))
+    y1 = f1(x)  # first trace: packs under the trace — must not cache
+    y2 = f2(x)  # second trace: would explode on a poisoned cache
+    np.testing.assert_allclose(np.asarray(y2), 2 * np.asarray(y1), rtol=1e-6)
+    # eager apply afterwards still works (and may now cache concretely)
+    y3 = op.apply(x, backend="fused", use_kernel=False)
+    np.testing.assert_allclose(np.asarray(y3), np.asarray(y1), rtol=1e-6)

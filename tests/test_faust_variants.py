@@ -14,9 +14,10 @@ import pytest
 from repro.configs import get_smoke
 from repro.layers.faust_linear import (
     FaustSpec,
+    blockfaust_to_params,
+    factorize_spec,
     faust_linear_apply,
     faust_linear_init,
-    from_dense,
     params_to_blockfaust,
 )
 from repro.layers.param import split_annotations
@@ -106,13 +107,17 @@ def test_faust_trainer_integration(tmp_path):
     np.testing.assert_array_equal(idx_before, idx_after)
 
 
-def test_from_dense_compression_roundtrip_quality():
-    """Compressing a (block-sparse by construction) dense weight recovers it."""
+def test_factorize_compression_roundtrip_quality():
+    """Compressing a (block-sparse by construction) dense weight recovers it
+    (factorize block route + blockfaust_to_params, the from_dense path)."""
     spec = FaustSpec(n_factors=2, block=8, k=2)
     ann = faust_linear_init(jax.random.PRNGKey(3), 32, 64, spec)
     p, _ = split_annotations(ann)
     w_true = params_to_blockfaust(p, spec, 32, 64).todense()
-    p2 = from_dense(w_true, spec, n_iter_two=40, n_iter_global=40)
+    from repro.api import factorize
+
+    _, info = factorize(w_true, factorize_spec(spec, 40, 40))
+    p2 = blockfaust_to_params(info.blockfausts[0])
     vals, _ = split_annotations(p2)
     # rebuild with the packed ks from compression
     from repro.core.compress import BlockFaust, BlockSparseFactor

@@ -7,17 +7,17 @@ Key validations against the paper's own claims:
     (§IV-C): exact factorization, J = log2(n) factors, 2n nnz each —
     recovering the O(n log n) fast transform (Fig. 1/6);
   * MEG-style factorization achieves RE ≪ 1 at RCG > 1 (§V-A);
-  * compress_matrix round-trips through the packed BlockFaust format.
+  * the factorize block route round-trips through the packed BlockFaust
+    format.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.api import FactorizeSpec, factorize
 from repro.core import (
     Faust,
-    compress_matrix,
-    compress_matrix_batched,
     default_init,
     hadamard_matrix,
     hadamard_spec,
@@ -157,20 +157,21 @@ def test_palm4msa_batched_matches_sequential(bsz):
         )
 
 
-def test_compress_matrix_batched_matches_sequential():
-    """Batched compression reproduces per-matrix compress_matrix outputs."""
+def test_factorize_batched_matches_sequential():
+    """A batched stack reproduces per-matrix block-route outputs."""
     rng = np.random.default_rng(13)
     ws = jnp.asarray(rng.normal(size=(2, 24, 40)).astype(np.float32))
-    kw = dict(n_factors=2, bk=8, bn=8, k_first=3, k_mid=2,
-              n_iter_two=15, n_iter_global=15)
-    bfs, fausts, info = compress_matrix_batched(ws, **kw)
+    spec = FactorizeSpec(n_factors=2, block=8, k_first=3, k_mid=2,
+                         n_iter_two=15, n_iter_global=15)
+    _, info = factorize(ws, spec)
+    bfs, fausts = info.blockfausts, info.fausts
     assert len(bfs) == len(fausts) == 2
-    assert info.cache.total == 2  # one split + one global refine
+    assert info.hierarchical.cache.total == 2  # one split + one global refine
     for i in range(2):
-        bf_i, _ = compress_matrix(ws[i], **kw)
+        _, info_i = factorize(ws[i], spec)
         np.testing.assert_allclose(
             np.asarray(bfs[i].todense()),
-            np.asarray(bf_i.todense()),
+            np.asarray(info_i.blockfausts[0].todense()),
             rtol=1e-5,
             atol=1e-6,
         )
@@ -262,15 +263,16 @@ def test_hierarchical_dims_rectangular():
 
 
 @pytest.mark.parametrize("shape", [(48, 96), (96, 48), (76, 140)])
-def test_compress_matrix_blockfaust_roundtrip(shape):
+def test_factorize_blockfaust_roundtrip(shape):
     """Packed BlockFaust == dense Faust chain, both weight orientations
     (and non-block-multiple dims exercising the padding path)."""
     rng = np.random.default_rng(6)
     w = jnp.asarray(rng.normal(size=shape).astype(np.float32))
-    bf, faust = compress_matrix(
-        w, n_factors=3, bk=8, bn=8, k_first=3, k_mid=2,
-        n_iter_two=25, n_iter_global=25,
+    _, info = factorize(
+        w, FactorizeSpec(n_factors=3, block=8, k_first=3, k_mid=2,
+                         n_iter_two=25, n_iter_global=25),
     )
+    bf, faust = info.blockfausts[0], info.fausts[0]
     dense_from_chain = np.asarray(bf.todense())
     assert dense_from_chain.shape == shape
     a_dense = np.asarray(faust.todense())

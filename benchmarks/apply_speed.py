@@ -22,8 +22,19 @@ Also verifies the launch-count claim structurally: the fused path stages
 exactly **one** pallas_call into the jaxpr vs J on the per-factor path.
 On CPU the Pallas paths run in interpret mode (emulation — the measured
 times are for smoke value only; the roofline columns carry the TPU story).
+
+``run_grad`` (``--grad`` / the runner's ``apply_grad``) benchmarks the
+**training path**: ``jax.grad`` of a scalar loss through the dense /
+per-factor / fused (old rematerializing backward vs the fused
+``kernels/chain_bwd.py`` dgrad+wgrad pair) / mesh-sharded backends, with
+fwd-only vs fwd+bwd ratios, backward launch counts, a dx/dvalues parity
+gate vs the reference walk, and the grad-priced DispatchReport on the
+JSON row (EXPERIMENTS.md §Training-path perf).
 """
 from __future__ import annotations
+
+import dataclasses
+import os
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +42,7 @@ import numpy as np
 
 from benchmarks.common import emit, timeit_us
 from repro.api import FaustOp, last_report
-from repro.core.compress import BlockFaust, random_block_factor
+from repro.core.compress import BlockFaust, pack_chain, random_block_factor
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
@@ -54,13 +65,8 @@ def run(cases=((1024, 4096, 2, 4, 128), (2048, 8192, 2, 4, 128), (2048, 8192, 3,
     use_kernel = True  # interpret-mode emulation off-TPU
     interpret = not on_tpu
     for in_dim, out_dim, n_factors, blocks_k, block in cases:
-        keys = jax.random.split(jax.random.PRNGKey(0), n_factors)
-        dims = [in_dim] + [min(in_dim, out_dim)] * (n_factors - 1) + [out_dim]
-        factors = tuple(
-            random_block_factor(keys[i], dims[i], dims[i + 1], block, block, blocks_k)
-            for i in range(n_factors)
-        )
-        op = FaustOp.from_blockfaust(BlockFaust(factors, jnp.asarray(1.0)))
+        bf, dims = _chain_case(in_dim, out_dim, n_factors, blocks_k, block)
+        op = FaustOp.from_blockfaust(bf)
         w = op.todense()
         x = jax.random.normal(jax.random.PRNGKey(1), (batch, in_dim))
 
@@ -121,5 +127,175 @@ def run(cases=((1024, 4096, 2, 4, 128), (2048, 8192, 2, 4, 128), (2048, 8192, 3,
         )
 
 
+def _chain_case(in_dim, out_dim, n_factors, blocks_k, block):
+    keys = jax.random.split(jax.random.PRNGKey(0), n_factors)
+    dims = [in_dim] + [min(in_dim, out_dim)] * (n_factors - 1) + [out_dim]
+    factors = tuple(
+        random_block_factor(keys[i], dims[i], dims[i + 1], block, block, blocks_k)
+        for i in range(n_factors)
+    )
+    return BlockFaust(factors, jnp.asarray(1.0)), dims
+
+
+def run_grad(
+    cases=((1024, 4096, 2, 4, 128), (2048, 8192, 3, 4, 128)),
+    batch: int = 128,
+) -> None:
+    """Time ``jax.grad`` of a scalar loss through every backend (see module
+    docstring).  The old rematerializing chain backward is reachable via
+    ``REPRO_CHAIN_BWD=ref`` (set only around its trace), so the fused vs
+    rematerializing comparison is same-forward, backward-only."""
+    from repro.kernels.ops import packed_chain_apply
+
+    on_tpu = jax.default_backend() == "tpu"
+    interpret = not on_tpu
+    devices = jax.devices()
+    for in_dim, out_dim, n_factors, blocks_k, block in cases:
+        bf, dims = _chain_case(in_dim, out_dim, n_factors, blocks_k, block)
+        chain = pack_chain(bf)
+        op = FaustOp.from_blockfaust(bf)
+        w = op.todense()
+        x = jax.random.normal(jax.random.PRNGKey(1), (batch, in_dim))
+        dy_seed = jax.random.normal(jax.random.PRNGKey(2), (batch, out_dim))
+
+        def chain_loss(values, v, use_kernel):
+            pc = dataclasses.replace(chain, values=values)
+            y = packed_chain_apply(
+                v, pc, use_kernel=use_kernel, interpret=interpret
+            )
+            return jnp.sum(y * dy_seed)
+
+        # the uncompressed layer: grad wrt the dense weight
+        dense_fn = jax.jit(
+            jax.grad(lambda w_, v: jnp.sum((v @ w_) * dy_seed), (0, 1))
+        )
+        # per-factor reference walk under XLA autodiff (backend="bsr" shape)
+        bsr_fn = jax.jit(
+            jax.grad(lambda a, b: chain_loss(a, b, False), (0, 1))
+        )
+        # fused forward + the OLD rematerializing einsum backward
+        remat_fn = jax.jit(
+            jax.grad(lambda a, b: chain_loss(a, b, True), (0, 1))
+        )
+        prev_bwd = os.environ.get("REPRO_CHAIN_BWD")
+        os.environ["REPRO_CHAIN_BWD"] = "ref"
+        try:
+            remat_fn(chain.values, x)  # compile while the escape hatch is on
+            # fwd kernel only — the rematerializing backward is all einsums
+            n_calls_remat = count_pallas_calls(remat_fn, chain.values, x)
+        finally:
+            if prev_bwd is None:
+                os.environ.pop("REPRO_CHAIN_BWD", None)
+            else:
+                os.environ["REPRO_CHAIN_BWD"] = prev_bwd
+        # fused forward + fused dgrad/wgrad backward (kernels/chain_bwd.py)
+        # — compiled with the escape hatch pinned OFF, so an ambient
+        # REPRO_CHAIN_BWD=ref can't turn this leg into a second remat one
+        fused_fn = jax.jit(
+            jax.grad(lambda a, b: chain_loss(a, b, True), (0, 1))
+        )
+        fwd_fn = jax.jit(lambda a, b: chain_loss(a, b, True))
+        os.environ.pop("REPRO_CHAIN_BWD", None)
+        try:
+            fused_fn(chain.values, x)  # compile
+            # structural: the whole fused backward is ≤ 2 extra launches
+            n_calls = count_pallas_calls(fused_fn, chain.values, x)
+        finally:
+            if prev_bwd is not None:
+                os.environ["REPRO_CHAIN_BWD"] = prev_bwd
+
+        gv_f, gx_f = fused_fn(chain.values, x)
+        gv_r, gx_r = bsr_fn(chain.values, x)
+        parity = max(_rel(gv_f, gv_r), _rel(gx_f, gx_r))
+        if parity > 1e-5:
+            raise RuntimeError(
+                f"grad parity broken ({in_dim}x{out_dim} J{n_factors}): "
+                f"{parity:.3e} > 1e-5"
+            )
+
+        # interpret-mode calls are CPU emulation (smoke value only, and
+        # slow) — keep their iteration count down; the XLA paths get the
+        # usual medians
+        kw = dict(n_warmup=1, n_iter=3) if interpret else {}
+        t_dense = timeit_us(dense_fn, w, x)
+        t_bsr = timeit_us(bsr_fn, chain.values, x)
+        t_remat = timeit_us(remat_fn, chain.values, x, **kw)
+        t_fused = timeit_us(fused_fn, chain.values, x, **kw)
+        t_fwd = timeit_us(fwd_fn, chain.values, x, **kw)
+
+        assert n_calls == 3, n_calls  # 1 fwd + dgrad + wgrad
+        assert n_calls_remat == 1, n_calls_remat  # fwd only, einsum bwd
+
+        # optional: the mesh-sharded training path (2×2 debug mesh; ref
+        # segments on CPU so the collective structure is timed, not the
+        # interpret emulator).  Skipped (key omitted — NaN would break
+        # strict-JSON consumers of run.py --json) below 4 devices.
+        t_sharded = None
+        if len(devices) >= 4:
+            from repro.api.operator import ShardSpec
+
+            mesh = jax.sharding.Mesh(
+                np.array(devices[:4]).reshape(2, 2), ("data", "model")
+            )
+
+            def sh_loss(vals, v):
+                bf_sh = BlockFaust(
+                    tuple(
+                        dataclasses.replace(f, values=val)
+                        for f, val in zip(bf.factors, vals)
+                    ),
+                    bf.lam,
+                )
+                o = FaustOp.from_blockfaust(bf_sh).with_sharding(
+                    ShardSpec(mesh)
+                )
+                return jnp.sum(
+                    o.apply(v, backend="fused_sharded", use_kernel=on_tpu)
+                    * dy_seed
+                )
+
+            sharded_fn = jax.jit(
+                jax.grad(sh_loss, (0, 1), allow_int=True)
+            )
+            vals = [f.values for f in bf.factors]
+            t_sharded = timeit_us(sharded_fn, vals, x, **kw)
+
+        # the grad-priced dispatch decision (staged under the AD trace)
+        jax.make_jaxpr(
+            jax.grad(lambda v: jnp.sum(op.apply(v, use_kernel=False)))
+        )(x)
+        report = last_report()
+        assert report.grad, "dispatch did not detect the AD trace"
+        est = report.est_us
+        grad_fuse_gain = (
+            est["bsr"] / est["fused"] if "fused" in est and "bsr" in est else 0.0
+        )
+        sharded_col = (
+            f"sharded_us={t_sharded:.1f};" if t_sharded is not None else ""
+        )
+        emit(
+            f"grad_{in_dim}x{out_dim}_J{n_factors}",
+            t_fused,
+            f"dense_us={t_dense:.1f};bsr_us={t_bsr:.1f};"
+            f"remat_us={t_remat:.1f};fused_us={t_fused:.1f};"
+            f"{sharded_col}fwd_us={t_fwd:.1f};"
+            f"bwd_over_fwd={t_fused / max(t_fwd, 1e-9):.2f};"
+            f"remat_over_fused={t_remat / max(t_fused, 1e-9):.2f};"
+            f"bwd_pallas_calls={n_calls - 1};"
+            f"grad_parity={parity:.1e};auto_grad_backend={report.backend};"
+            f"tpu_grad_fuse_gain={grad_fuse_gain:.2f};"
+            f"interpret={int(interpret)}",
+            dispatch=report,
+        )
+
+
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--grad", action="store_true",
+        help="run the training-path (fwd+bwd) benchmark instead",
+    )
+    args = ap.parse_args()
+    run_grad() if args.grad else run()

@@ -17,6 +17,10 @@ tracked across PRs, e.g.::
   source_localization — §V-B, Fig. 9 (OMP with FAµST operators)
   denoising           — §VI-C, Fig. 12 (FAµST dictionaries vs DDL)
   apply_speed         — §II-B2 (RCG flop model, measured + TPU roofline)
+  apply_grad          — training path: jax.grad through dense / per-factor /
+                        fused (old rematerializing vs fused dgrad+wgrad
+                        backward) / mesh-sharded backends
+                        (EXPERIMENTS.md §Training-path perf)
   batch_compress      — §II-B amortization at workload scale (batched vs
                         sequential factorization; EXPERIMENTS.md §Batched
                         compression)
@@ -39,7 +43,8 @@ def _force_host_devices(n: int = 8) -> None:
     every machine.  Must happen before the first jax import (hence here,
     not in the benchmark modules); a no-op when the flag is already set,
     and it only affects the *host* platform — TPU runs are untouched.
-    Applied only when shard_scaling is among the selected benchmarks, so
+    Applied only when shard_scaling or apply_grad (whose sharded-training
+    leg wants a 2×2 debug mesh) is among the selected benchmarks, so
     `--only apply_speed`-style timing runs keep their historical
     single-device environment."""
     flags = os.environ.get("XLA_FLAGS", "")
@@ -61,7 +66,8 @@ def main() -> None:
     args = ap.parse_args()
 
     requested = args.only.split(",") if args.only else None
-    if requested is None or "shard_scaling" in requested:
+    # apply_grad's sharded-training leg needs a (2, 2) debug mesh too
+    if requested is None or {"shard_scaling", "apply_grad"} & set(requested):
         _force_host_devices()
     from benchmarks import (
         apply_speed,
@@ -82,6 +88,7 @@ def main() -> None:
         "source_localization": source_localization.run,
         "denoising": denoising.run,
         "apply_speed": apply_speed.run,
+        "apply_grad": apply_speed.run_grad,
         "batch_compress": batch_compress.run,
         "shard_scaling": shard_scaling.run,
     }

@@ -1,0 +1,129 @@
+#!/usr/bin/env python
+"""Measure this host's roofline constants and cache them for dispatch.
+
+The cost model in ``repro.api.dispatch`` prices backends against
+``PEAK_FLOPS`` / ``HBM_BW`` / per-launch overhead from
+``repro.launch.roofline``.  By default those are builtin TPU-v5e numbers
+(host-independent decisions); this script measures the *actual* host —
+
+* ``peak_flops``  — timed square jit'd matmul (the MXU/AVX peak proxy);
+* ``hbm_bw``      — timed memcpy-shaped op (read + write of a large array);
+* ``t_launch_us`` — per-call wall time of an effectively-empty jitted op
+  (dispatch + launch overhead);
+* ``link_bw``     — not measurable on a single host; the builtin ICI
+  number is recorded as-is (and marked so).
+
+— and caches them to ``~/.cache/repro/roofline.json`` (override with
+``REPRO_ROOFLINE=/path`` or ``--out``).  On the next import,
+``repro.launch.roofline`` loads the measured values (builtin fallback when
+absent/invalid) and every ``DispatchReport`` records which source priced
+it in its ``roofline`` field.  Delete the cache file or set
+``REPRO_ROOFLINE=builtin`` to return to host-independent decisions.
+
+Usage::
+
+    PYTHONPATH=src python scripts/calibrate_roofline.py [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.launch.roofline import _BUILTIN, roofline_cache_path  # noqa: E402
+
+
+def _median_s(fn, n_warmup: int = 3, n_iter: int = 10) -> float:
+    for _ in range(n_warmup):
+        jax.block_until_ready(fn())
+    times = []
+    for _ in range(n_iter):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def measure_peak_flops(n: int | None = None) -> float:
+    """2·n³ flops over the median time of a square jit'd matmul.  bf16 on
+    TPU (the MXU peak the builtin constant refers to), f32 elsewhere."""
+    on_tpu = jax.default_backend() == "tpu"
+    if n is None:
+        n = 4096 if on_tpu else 1024
+    dtype = jnp.bfloat16 if on_tpu else jnp.float32
+    a = jax.random.normal(jax.random.PRNGKey(0), (n, n), dtype)
+    b = jax.random.normal(jax.random.PRNGKey(1), (n, n), dtype)
+    f = jax.jit(lambda a, b: a @ b)
+    t = _median_s(lambda: f(a, b))
+    return 2.0 * n**3 / t
+
+
+def measure_hbm_bw(mbytes: int = 256) -> float:
+    """Bytes moved (read + write) over the median time of an elementwise
+    copy-shaped op on a ``mbytes``-sized f32 array."""
+    n = mbytes * 2**20 // 4
+    a = jnp.arange(n, dtype=jnp.float32)
+    f = jax.jit(lambda a: a + 1.0)
+    t = _median_s(lambda: f(a))
+    return 2.0 * n * 4 / t
+
+
+def measure_t_launch_us() -> float:
+    """Per-call wall time of a trivially small jitted op — the dispatch +
+    launch overhead the cost model charges per kernel."""
+    a = jnp.zeros((8,), jnp.float32)
+    f = jax.jit(lambda a: a + 1.0)
+    return _median_s(lambda: f(a), n_warmup=5, n_iter=50) * 1e6
+
+
+def calibrate() -> dict:
+    record = {
+        "peak_flops": measure_peak_flops(),
+        "hbm_bw": measure_hbm_bw(),
+        "link_bw": _BUILTIN["link_bw"],  # single-host: not measurable
+        "t_launch_us": measure_t_launch_us(),
+        "meta": {
+            "device": jax.default_backend(),
+            "device_kind": jax.devices()[0].device_kind,
+            "jax": jax.__version__,
+            "measured_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+            "link_bw_source": "builtin (single-host)",
+        },
+    }
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--out",
+        default=None,
+        help="cache path (default: REPRO_ROOFLINE or ~/.cache/repro/roofline.json)",
+    )
+    args = ap.parse_args()
+    out = args.out or roofline_cache_path()
+    if out.lower() in ("", "0", "builtin", "off"):
+        raise SystemExit(
+            f"refusing to write to the sentinel path {out!r}; pass --out"
+        )
+    record = calibrate()
+    os.makedirs(os.path.dirname(os.path.abspath(out)), exist_ok=True)
+    with open(out, "w", encoding="utf-8") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
+    print(f"wrote {out}")
+    for k in ("peak_flops", "hbm_bw", "link_bw", "t_launch_us"):
+        tag = " (builtin)" if k == "link_bw" else ""
+        print(f"  {k:12s} = {record[k]:.4g}{tag}  (builtin {_BUILTIN[k]:.4g})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+#!/usr/bin/env python
+"""Perf-regression gate vs the committed benchmark baseline.
+
+Compares a fresh ``benchmarks/run.py --json`` output against
+``BENCH_baseline.json`` (checked in at the repo root): any row present in
+both whose measured ``us_per_call`` regressed by more than the threshold
+(default 25% relative) fails the check, listing the offenders.  Rows are
+matched by ``name``; rows missing from either side are ignored (new
+benchmarks don't fail, retired ones don't block), as are accuracy-only
+rows (``us_per_call == 0``).
+
+Rows faster than ``--min-us`` (default 100 ms) in the *baseline* are
+reported but not gated: on a shared CPU host, sub-100ms XLA timings swing
+well past 25% run to run (observed 2–3×), so gating them would only gate
+scheduler noise — the interpret-/solve-dominated rows that carry the perf
+claims are stable within a few percent.  Lower the floor on quiet hosts
+or on real TPU timings.
+
+Run by ``scripts/ci.sh`` (skippable via ``REPRO_SKIP_BENCH=1`` on slow or
+noisy hosts).  Pure stdlib.
+
+Usage::
+
+    python scripts/check_bench.py NEW.json [--baseline BENCH_baseline.json]
+        [--threshold 0.25] [--min-us 100000]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def load_rows(path: str) -> dict[str, float]:
+    with open(path, encoding="utf-8") as f:
+        rows = json.load(f)
+    return {
+        r["name"]: float(r["us_per_call"])
+        for r in rows
+        if float(r.get("us_per_call", 0)) > 0
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("new", help="freshly produced run.py --json output")
+    ap.add_argument(
+        "--baseline", default=os.path.join(ROOT, "BENCH_baseline.json")
+    )
+    ap.add_argument("--threshold", type=float, default=0.25)
+    ap.add_argument("--min-us", type=float, default=100_000.0)
+    args = ap.parse_args()
+
+    base = load_rows(args.baseline)
+    new = load_rows(args.new)
+    shared = sorted(set(base) & set(new))
+    if not shared:
+        print("check_bench: no comparable rows (nothing to gate)")
+        return 0
+    failures, gated = [], 0
+    for name in shared:
+        rel = (new[name] - base[name]) / base[name]
+        if base[name] < args.min_us:
+            flag = "(below gate floor, informational)"
+        elif rel > args.threshold:
+            flag = "REGRESSED"
+        else:
+            flag = "ok"
+        print(
+            f"  {name}: {base[name]:.1f}us -> {new[name]:.1f}us "
+            f"({rel:+.1%}) {flag}"
+        )
+        if base[name] >= args.min_us:
+            gated += 1
+            if rel > args.threshold:
+                failures.append(name)
+    if failures:
+        print(
+            f"check_bench: FAILED — {len(failures)}/{gated} gated rows "
+            f"regressed > {args.threshold:.0%}: {failures}"
+        )
+        return 1
+    print(
+        f"check_bench: OK ({gated} gated rows within {args.threshold:.0%}; "
+        f"{len(shared) - gated} informational)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -74,4 +74,26 @@ elif [ "$mdstatus" -ne 0 ]; then
     exit "$mdstatus"
 fi
 echo "ci: multi-device leg OK"
+
+# Perf-regression leg: re-run the cheap apply benchmarks and gate >25%
+# relative regressions against the committed BENCH_baseline.json
+# (scripts/check_bench.py).  REPRO_SKIP_BENCH=1 skips it on slow/noisy
+# hosts; REPRO_ROOFLINE=builtin pins the dispatch constants so a host
+# calibration cache can't shift which backend the rows measure.
+if [ "${REPRO_SKIP_BENCH:-0}" != "1" ]; then
+    if ! PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} REPRO_ROOFLINE=builtin \
+        timeout "$CI_TIMEOUT" \
+        python benchmarks/run.py --only apply_speed,apply_grad \
+        --json /tmp/repro_bench_ci.json > /dev/null; then
+        echo "ci: BENCH LEG FAILED TO RUN"
+        exit 1
+    fi
+    if ! python scripts/check_bench.py /tmp/repro_bench_ci.json; then
+        echo "ci: PERF REGRESSION vs BENCH_baseline.json"
+        exit 1
+    fi
+    echo "ci: bench leg OK"
+else
+    echo "ci: bench leg skipped (REPRO_SKIP_BENCH=1)"
+fi
 exit "$status"

@@ -27,12 +27,26 @@ compiled ground truth):
   carries a :class:`~repro.api.operator.ShardSpec` (see
   EXPERIMENTS.md §Sharded apply).
 
+**Training-aware pricing** (``grad=True``): gradient applies cost three
+passes, not one, and the passes have *different* rooflines per backend —
+the per-factor path re-pays the boundary activation round-trips in both
+backward passes while the fused path runs the ``kernels/chain_bwd.py``
+dgrad (transposed chain, 1 launch) + wgrad (VMEM recompute + cotangent
+walk, 1 launch, one ``s_tot`` f32 cotangent store per batch tile).  A
+``grad=True`` cost query prices forward+backward jointly so
+``backend="auto"`` under ``jax.grad`` (detected automatically by
+``FaustOp.apply``) makes training-aware choices; the report records
+``grad`` and per-backend joint estimates.
+
 Every decision is materialized as a :class:`DispatchReport` — benchmarks
 record it next to their numbers (``benchmarks/run.py --json``) and tests
 assert which path ran (the report is also retrievable after the fact via
-:func:`last_report`).  The model is intentionally the *TPU* roofline even
-off-TPU: the decision must be a pure function of (batch, shape, dtype),
-not of where the benchmark happened to run.
+:func:`last_report`).  The model is the *TPU* roofline by default even
+off-TPU — the decision is then a pure function of (batch, shape, dtype),
+not of where the benchmark happened to run — unless the operator has
+opted in to host-measured constants via
+``scripts/calibrate_roofline.py`` (the report's ``roofline`` field names
+the source either way).
 """
 from __future__ import annotations
 
@@ -41,12 +55,33 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.launch.roofline import HBM_BW, LINK_BW, PEAK_FLOPS
+from repro.launch.roofline import (
+    HBM_BW,
+    LINK_BW,
+    PEAK_FLOPS,
+    ROOFLINE_SOURCE,
+    T_LAUNCH_US,
+)
 
 # Fixed per-launch overhead (µs).  Breaks roofline ties in favor of
 # fewer launches — the structural argument for the fused chain at small
-# batch, where all paths are far from both roofs.
-LAUNCH_US = 2.0
+# batch, where all paths are far from both roofs.  Measured on the host
+# when a calibration cache exists (see launch/roofline.py).
+LAUNCH_US = T_LAUNCH_US
+
+# The wgrad kernel's batch-tile size (kernels/chain_bwd.py runs at the
+# chain kernels' default bt; FaustOp.apply's bt= is not plumbed into the
+# cost query, so pricing assumes the default).
+_WGRAD_BT = 128
+
+
+def _wgrad_spill_bytes(b: int, s_tot: float) -> float:
+    """HBM bytes of the wgrad kernel's f32 partial-dvalues slabs: batches
+    wider than one tile store (and re-read for the sum) one ``s_tot`` f32
+    slab per *extra* tile — single-tile batches write dvalues exactly
+    once, already counted in the weight-stream term.  Shared by the
+    single-device and per-shard grad pricings."""
+    return 8.0 * s_tot * (max(-(-b // _WGRAD_BT), 1) - 1)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,6 +101,11 @@ class DispatchReport:
     # mesh facts (None / 0 when the operator carries no ShardSpec)
     mesh_shape: tuple | None = None  # ((axis, size), ...) of the target mesh
     collective_bytes: int = 0  # per-shard ICI bytes of the sharded plan
+    # training-aware pricing: True ⇔ est_us are joint forward+backward costs
+    grad: bool = False
+    # which roofline constants priced this decision ("builtin" or the
+    # calibration cache path — see launch/roofline.py)
+    roofline: str = ROOFLINE_SOURCE
 
     def as_row(self) -> dict:
         """Flat JSON-ready form for benchmark rows."""
@@ -79,6 +119,8 @@ class DispatchReport:
             "s_tot": self.s_tot,
             "est_us": {k: round(v, 3) for k, v in self.est_us.items()},
             "reason": self.reason,
+            "grad": self.grad,
+            "roofline": self.roofline,
         }
         if self.mesh_shape is not None:
             row["mesh_shape"] = {a: s for a, s in self.mesh_shape}
@@ -112,6 +154,7 @@ def choose_backend(
     feasible: tuple[str, ...] = ("dense", "bsr", "fused"),
     requested: str = "auto",
     shard: dict | None = None,
+    grad: bool = False,
 ) -> DispatchReport:
     """Pick the cheapest feasible backend under the roofline model.
 
@@ -121,6 +164,7 @@ def choose_backend(
     :meth:`repro.kernels.chain_sharded.ShardPlan.summary` of the operator's
     mesh plan — when given, ``fused_sharded`` joins the priced backends
     with per-shard roofline terms plus the ICI collective term.
+    ``grad=True`` prices forward+backward jointly (see module docstring).
     """
     m, n = shape
     b = batch
@@ -140,21 +184,58 @@ def choose_backend(
     # dense = build the matrix (chain product: ~2·s_tot·min(m,n) flops over
     # J−1 launches, m·n written then re-read) + one dense matmul
     build_flops = 2.0 * s_tot * min(m, n)
-    est = {
-        "dense": roofline_us(
-            2.0 * b * m * n + build_flops,
-            elt * (2 * m * n + edge),
-            n_factors,
-        ),
-        "bsr": roofline_us(
-            2.0 * b * s_tot, elt * (s_tot + edge + inner), n_factors
-        ),
-        "fused": roofline_us(2.0 * b * s_tot, elt * (s_tot + edge), 1),
-    }
+    if not grad:
+        est = {
+            "dense": roofline_us(
+                2.0 * b * m * n + build_flops,
+                elt * (2 * m * n + edge),
+                n_factors,
+            ),
+            "bsr": roofline_us(
+                2.0 * b * s_tot, elt * (s_tot + edge + inner), n_factors
+            ),
+            "fused": roofline_us(2.0 * b * s_tot, elt * (s_tot + edge), 1),
+        }
+    else:
+        # joint fwd+bwd pricing — three passes per apply, both structured
+        # paths stream weights ~4× (fwd + dgrad + wgrad recompute/walk) and
+        # write the s_tot weight cotangent once; they differ in what rides
+        # along:
+        #   dense: fwd matmul + dgrad (dy@Wᵀ) + wgrad (xᵀ@dy) = 3·2bmn, the
+        #     build chain re-paid through its own grads (~2×build), W
+        #     re-read twice + dW written, every edge activation touched 3×;
+        #   bsr:  XLA autodiff of the per-factor walk — every pass pays the
+        #     per-boundary activation round-trips (`inner`, the term the
+        #     forward fusion removed: stored acts in fwd, re-read in wgrad,
+        #     cotangent round-trips in dgrad) and J launches each;
+        #   fused: the chain_bwd kernels — dgrad is the transposed fwd
+        #     roofline (1 launch); wgrad recomputes the chain in VMEM and
+        #     walks cotangents while emitting dvalues (1 launch, ~2 extra
+        #     flop passes), with *zero* activation traffic; batches wider
+        #     than one tile pay the partial-dvalues spill
+        #     (:func:`_wgrad_spill_bytes`).
+        wgrad_spill = _wgrad_spill_bytes(b, s_tot)
+        est = {
+            "dense": roofline_us(
+                3 * 2.0 * b * m * n + 3.0 * build_flops,
+                elt * (4 * m * n + 3 * edge),
+                3 * n_factors,
+            ),
+            "bsr": roofline_us(
+                3 * 2.0 * b * s_tot,
+                elt * (4 * s_tot + 3 * edge + 3 * inner),
+                3 * n_factors,
+            ),
+            "fused": roofline_us(
+                5 * 2.0 * b * s_tot,
+                elt * (4 * s_tot + 3 * edge) + wgrad_spill,
+                3,
+            ),
+        }
     coll_bytes = 0
     if shard is not None and "fused_sharded" in feasible:
         est["fused_sharded"], coll_bytes = _sharded_est(
-            roofline_us, b, m, n, s_tot, elt, shard, inner_dims
+            roofline_us, b, m, n, s_tot, elt, shard, inner_dims, grad
         )
     est = {k: v for k, v in est.items() if k in feasible}
     # stable preference on ties: fewest-launch structured path first
@@ -170,7 +251,8 @@ def choose_backend(
         reason = f"only feasible backend ({backend})"
     else:
         reason = (
-            f"{backend} modeled {est[backend]:.2f}us vs "
+            f"{backend} modeled {est[backend]:.2f}us"
+            f"{' fwd+bwd' if grad else ''} vs "
             f"{runner_up} {est[runner_up]:.2f}us "
             f"(batch={b}, s_tot={s_tot}, dense_nnz={m * n})"
         )
@@ -193,12 +275,14 @@ def choose_backend(
         reason=reason,
         mesh_shape=shard.get("mesh_shape") if shard is not None else None,
         collective_bytes=coll_bytes,
+        grad=grad,
     )
 
 
 def _sharded_est(
     roofline_us, b: int, m: int, n: int, s_tot: int, elt: int, shard: dict,
     inner_dims: tuple[int, ...] = (),
+    grad: bool = False,
 ) -> tuple[float, int]:
     """Model the sharded fused apply: per-shard roofline + ICI collectives.
 
@@ -213,6 +297,14 @@ def _sharded_est(
     is *not* fusable (``shard["fusable"]`` False) the fallback really runs
     one launch per factor with the per-factor activation round-trips, so
     it is priced like ``bsr``, not like the fused kernel.
+
+    ``grad=True`` scales to the joint fwd+bwd cost with the same
+    three-pass structure as the single-device ``fused`` pricing (dgrad
+    transposed + wgrad recompute/walk per shard, 3× the segment
+    launches); the boundary collectives run in both directions — the
+    transpose of the forward ``all_gather`` is a ``reduce_scatter`` of
+    the boundary cotangent in dgrad *and* in wgrad's walk, so the ICI
+    term triples.
     """
     from repro.kernels.chain_sharded import ici_bytes
 
@@ -237,11 +329,28 @@ def _sharded_est(
             # per-factor reference fallback: every boundary activation
             # round-trips through HBM, one launch per factor
             byts += elt * 2 * b_loc * sum(inner_dims)
-    return roofline_us(flops, byts, launches, coll_bytes), coll_bytes
+    if grad:
+        if shard.get("mode") != "model" and not shard.get("fusable", True):
+            # the non-fusable fallback differentiates through the
+            # per-factor XLA walk, not the chain_bwd kernels — price its
+            # backward like bsr (3 passes re-paying the fwd traffic, a
+            # dvalues write, no fused recompute or spill)
+            flops = 3.0 * flops
+            byts = 3.0 * byts + elt * s_tot
+        else:
+            s_loc = s_tot / n_model if shard.get("mode") == "model" else s_tot
+            flops = 5.0 * flops  # fwd + dgrad + wgrad's recompute/walk/emit
+            byts = 4.0 * byts + _wgrad_spill_bytes(b_loc, s_loc)
+        launches = 3 * launches
+        coll_est = 3 * coll_bytes
+    else:
+        coll_est = coll_bytes
+    return roofline_us(flops, byts, launches, coll_est), coll_bytes
 
 
 def dispatch(
-    op, batch: int, dtype, requested: str = "auto", shard: dict | None = None
+    op, batch: int, dtype, requested: str = "auto", shard: dict | None = None,
+    grad: bool = False,
 ) -> DispatchReport:
     """Decide (or record) the backend for one *leaf* operator.
 
@@ -250,8 +359,10 @@ def dispatch(
     (and what it *would* have picked, in ``reason``) but ``backend`` is
     the forced one.  ``shard`` is the operator's
     :meth:`~repro.kernels.chain_sharded.ShardPlan.summary` when it carries
-    a ShardSpec.  Composite operators dispatch per leaf during ``apply``;
-    :func:`last_report` returns the latest decision either way.
+    a ShardSpec; ``grad=True`` prices forward+backward jointly (set by
+    ``FaustOp.apply`` when it detects an AD trace).  Composite operators
+    dispatch per leaf during ``apply``; :func:`last_report` returns the
+    latest decision either way.
     """
     report = choose_backend(
         batch=batch,
@@ -263,6 +374,7 @@ def dispatch(
         feasible=op.feasible_backends(),
         requested=requested,
         shard=shard,
+        grad=grad,
     )
     if requested != "auto":
         report = dataclasses.replace(

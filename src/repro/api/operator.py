@@ -143,6 +143,29 @@ def _cached_unpack(pc: PackedChain) -> BlockFaust:
 _UNPACK_CACHE: dict[int, tuple] = {}
 
 
+def _under_ad(*trees) -> bool:
+    """Whether any array leaf is an autodiff tracer — i.e. this apply is
+    being staged under ``jax.grad``/``jax.vjp``/``jax.linearize`` and will
+    be followed by a backward pass.  Drives the dispatch cost model's
+    joint fwd+bwd pricing (``repro.api.dispatch`` ``grad=True``).
+
+    Limitations: ``jax.grad(jax.jit(f))`` is *not* detected — pjit's JVP
+    rule retraces the inner function with plain jaxpr tracers, so no
+    JVPTracer reaches this apply.  The repo convention (trainer,
+    benchmarks) is ``jit(grad(f))``, which is detected; callers on the
+    other pattern should pass ``apply(..., grad=True)`` explicitly.
+    Conversely a pure forward-mode ``jax.jvp`` also carries JVPTracers
+    and is priced as training (whether a transpose follows is unknowable
+    at trace time) — pass ``grad=False`` for jvp-only workloads."""
+    from jax.interpreters import ad
+
+    return any(
+        isinstance(leaf, ad.JVPTracer)
+        for tree in trees
+        for leaf in jax.tree_util.tree_leaves(tree)
+    )
+
+
 def _fusable(bf: BlockFaust) -> bool:
     """Whether ``pack_chain`` would accept this chain (uniform square
     blocks + contiguous factor boundaries) — checked without packing."""
@@ -382,6 +405,7 @@ class FaustOp:
         use_kernel: bool | None = None,
         bt: int = 128,
         interpret: bool | None = None,
+        grad: bool | None = None,
     ) -> Array:
         """``y = x @ todense()`` for ``x (..., shape[0])`` — the paper's
         O(s_tot) multiplication, on the backend of your choice:
@@ -405,6 +429,13 @@ class FaustOp:
 
         ``use_kernel=None`` auto-selects Pallas on TPU and the jnp
         reference paths elsewhere (CPU-safe); ``interpret`` likewise.
+        ``grad=None`` auto-detects an active autodiff trace (``jax.grad``
+        through this apply) and switches the cost model to joint
+        forward+backward pricing — ``jit(grad(f))`` training loops
+        dispatch training-aware with no call-site change; pass
+        ``True``/``False`` to override (``grad(jit(f))`` hides the AD
+        trace from detection — see :func:`_under_ad` — so pass
+        ``grad=True`` there).
         """
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}; got {backend!r}")
@@ -412,38 +443,40 @@ class FaustOp:
             use_kernel = jax.default_backend() == "tpu"
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
+        if grad is None:
+            grad = _under_ad(x, self)  # FaustOp is a pytree: covers all leaves
         if x.shape[-1] != self.shape[0]:
             raise ValueError(
                 f"apply expects x (..., {self.shape[0]}); got {x.shape}"
             )
-        return self._apply(x, backend, use_kernel, bt, interpret)
+        return self._apply(x, backend, use_kernel, bt, interpret, grad)
 
-    def _apply(self, x, backend, use_kernel, bt, interpret) -> Array:
+    def _apply(self, x, backend, use_kernel, bt, interpret, grad=False) -> Array:
         if self.kind == "leaf":
-            return self._leaf_apply(x, backend, use_kernel, bt, interpret)
+            return self._leaf_apply(x, backend, use_kernel, bt, interpret, grad)
         if self.kind == "compose":
             y = x
             for c in self.children:
-                y = c._apply(y, backend, use_kernel, bt, interpret)
+                y = c._apply(y, backend, use_kernel, bt, interpret, grad)
             return y
         ms = [c.shape[0] for c in self.children]
         if self.kind == "hstack":
             return jnp.concatenate(
-                [c._apply(x, backend, use_kernel, bt, interpret)
+                [c._apply(x, backend, use_kernel, bt, interpret, grad)
                  for c in self.children],
                 axis=-1,
             )
         splits = np.cumsum(ms[:-1]).tolist()
         parts = jnp.split(x, splits, axis=-1)
         ys = [
-            c._apply(p, backend, use_kernel, bt, interpret)
+            c._apply(p, backend, use_kernel, bt, interpret, grad)
             for c, p in zip(self.children, parts)
         ]
         if self.kind == "vstack":
             return sum(ys[1:], ys[0])
         return jnp.concatenate(ys, axis=-1)  # block_diag
 
-    def _leaf_apply(self, x, backend, use_kernel, bt, interpret) -> Array:
+    def _leaf_apply(self, x, backend, use_kernel, bt, interpret, grad=False) -> Array:
         from repro.api import dispatch as _dispatch
         from repro.kernels.ops import (
             blockfaust_apply,
@@ -478,6 +511,7 @@ class FaustOp:
         backend = _dispatch.dispatch(
             self, batch_of(x), x.dtype, requested=backend,
             shard=shard_plan.summary() if shard_plan is not None else None,
+            grad=grad,
         ).backend
         if backend == "fused_sharded":
             from repro.kernels import chain_sharded as _cs

@@ -196,6 +196,34 @@ class ChainPlan:
     def out_features(self) -> int:
         return self.out_feats[-1]
 
+    def reverse(self) -> "ChainPlan":
+        """Plan of the *transposed* chain ``Wᵀ = F_Jᵀ ··· F_1ᵀ``.
+
+        Factor order flips and every factor swaps its input/output block
+        domains; ``k_blocks``/step counts are unchanged (a transposed block
+        is still one stored block).  The transposed chain is a *scatter*
+        on the input side, so this plan never feeds the forward gather
+        kernel — it drives the fused **dgrad** kernel's reversed step
+        table (``repro.kernels.chain_bwd``) and the dispatch cost model's
+        transposed-roofline pricing.  An involution: ``p.reverse().reverse()
+        == p``.
+        """
+        sizes = tuple(
+            self.offsets[j + 1] - self.offsets[j] for j in range(self.n_factors)
+        )
+        offs = [0]
+        for s in reversed(sizes):
+            offs.append(offs[-1] + s)
+        return ChainPlan(
+            block=self.block,
+            in_blocks=tuple(reversed(self.out_blocks)),
+            out_blocks=tuple(reversed(self.in_blocks)),
+            k_blocks=tuple(reversed(self.k_blocks)),
+            offsets=tuple(offs),
+            in_feats=tuple(reversed(self.out_feats)),
+            out_feats=tuple(reversed(self.in_feats)),
+        )
+
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)

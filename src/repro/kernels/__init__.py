@@ -4,6 +4,10 @@
 ``chain.py``      — fused multi-factor chain: one launch for the whole
                     product, activations resident in VMEM (the general
                     subsystem; ``bsr_matmul`` is its J = 1 special case).
+``chain_bwd.py``  — fused chain *backward*: dgrad (transposed chain,
+                    reversed step table) + wgrad (VMEM recompute +
+                    cotangent walk) in ≤ 2 launches for any J
+                    (EXPERIMENTS.md §Training-path perf).
 ``chain_sharded.py`` — the fused chain per mesh shard under ``shard_map``:
                     factor out-blocks partition over ``'model'``, batch
                     over ``'data'``, all-gathers only at support-crossing

@@ -1,0 +1,501 @@
+"""Pallas TPU kernels: fused backward of the packed FAµST chain.
+
+The fused forward (``kernels/chain.py``) applies ``y = x @ F_1 @ ... @ F_J``
+in one launch with the intermediate activations resident in VMEM — they
+never reach HBM, so there is nothing saved for autodiff.  The original
+backward rematerialized every per-factor activation with the reference
+einsums and walked the chain factor-by-factor: ~3·J launches and the full
+``2·batch·Σ_j d_j`` HBM activation round-trip the forward was built to
+avoid.  This module gives the backward the same fusion treatment
+(FlashAttention-style: recompute inside VMEM, not through HBM):
+
+**dgrad** — ``dx = dy @ F_Jᵀ @ ... @ F_1ᵀ`` as one ``pallas_call``.  The
+step table is the forward's, reversed (``ChainPlan.reverse()`` describes
+the transposed chain); each step reads its ``(blk × blk)`` value block
+*transposed* straight from the packed ``(S, blk, blk)`` layout and
+scatter-accumulates ``g_o @ F[s]ᵀ`` into the ping-pong cotangent buffer —
+the gather-on-input forward is a scatter-on-input backward, so steps
+accumulate directly into VMEM slabs instead of framing an accumulator.
+Cotangents are masked at ragged factor boundaries exactly where the
+forward masked activations (the forward zeroed those columns, so their
+cotangent is dropped).
+
+**wgrad** — per-slot ``dvalues[s] = a_jᵀ @ g_j`` for every stored block,
+in one ``pallas_call`` of ``S_pre + S`` steps: a forward *recompute* phase
+re-runs factors ``1..J-1`` (checkpoint-free — the per-factor inputs
+``a_j`` land in one flat VMEM scratch, zero HBM activation traffic),
+then a reversed cotangent walk emits one packed ``(blk, blk)`` cotangent
+block per step while propagating ``g`` through the same transposed reads
+as dgrad.  Batch tiles each emit a partial ``(S, blk, blk)`` slab
+(accumulated outside the kernel — one ``s_tot`` store per tile, f32);
+single-tile batches store ``s_tot`` exactly once.
+
+Together: the whole chain backward is **≤ 2 launches** for any J (vs
+~3·J), with weight traffic ``3·s_tot`` (dgrad stream + wgrad's two
+phases) and *no* per-boundary activation round-trips.  VMEM budget: the
+wgrad scratch holds every per-factor input activation
+(``Σ_j IB_j · bt · blk`` f32) plus the cotangent ping-pong, so wide
+chains shrink the batch tile automatically (:func:`fit_bt` halves ``bt``
+until the footprint fits — interpret mode never checks VMEM, real TPU
+does at compile time).
+
+``chain_bwd_ref`` is the step-exact jnp oracle (the old rematerializing
+walk) — the parity target for tests and the ``REPRO_CHAIN_BWD=ref``
+escape hatch in ``kernels/ops.py``.
+"""
+from __future__ import annotations
+
+import functools
+import weakref
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.compress import ChainPlan
+from repro.kernels import ref as _ref
+
+Array = jax.Array
+
+# dgrad meta columns (one row per *reversed* step t; flat step s = S-1-t):
+#   0 dst_blk  input block the step scatter-accumulates into (runtime in_idx)
+#   1 src_blk  output block of the cotangent this step reads (static o)
+#   2 parity   ping-pong buffer holding this factor's cotangent input
+#   3 is_j0    1 ⇔ first reversed step of a factor: zero the dst buffer
+#   4 ncols    valid columns of the src cotangent block (ragged mask — the
+#              forward zeroed these columns, so the cotangent drops them)
+DGRAD_META_COLS = 5
+
+# wgrad meta columns (S_pre forward-recompute rows, then S reversed rows):
+#   fwd rows:  0 in_blk (runtime)  1 out_blk  2 is_k0  3 is_kend
+#              4 ncols  5 act_off_in  6 act_off_out
+#   bwd rows:  0 dst_blk (runtime) 1 src_blk  2 parity 3 is_j0
+#              4 ncols  5 act_off_j 6 propagate (0 on factor 0 — dx is
+#                                    dgrad's job, the walk stops there)
+WGRAD_META_COLS = 7
+
+
+# ---------------------------------------------------------------------------
+# Step-table assembly (host-side; cached per operator identity)
+# ---------------------------------------------------------------------------
+
+# Assembled (static ++ runtime in_idx) tables, keyed by the in_idx array
+# identity — repeated eager applies of the same operator do zero per-call
+# host work.  Bypassed under tracing (a cached tracer would leak out of
+# its trace); the per-plan static halves below stay lru-cached either way.
+_TABLE_CACHE: dict[tuple, tuple] = {}
+_TABLE_CACHE_MAX = 256
+
+
+def cached_table(plan: ChainPlan, in_idx: Array, tag: str, build) -> Array:
+    """Cache ``build()`` per ``(in_idx identity, plan, tag)`` (weakref-guarded
+    against id() reuse); assemble inline under tracing."""
+    if not jax.core.trace_state_clean() or isinstance(in_idx, jax.core.Tracer):
+        return build()
+    key = (id(in_idx), plan, tag)
+    ent = _TABLE_CACHE.get(key)
+    if ent is not None and ent[0]() is in_idx:
+        return ent[1]
+    table = build()
+    if len(_TABLE_CACHE) >= _TABLE_CACHE_MAX:
+        _TABLE_CACHE.pop(next(iter(_TABLE_CACHE)))
+    _TABLE_CACHE[key] = (weakref.ref(in_idx), table)
+    return table
+
+
+def _ncols(plan: ChainPlan, j: int, o: np.ndarray) -> np.ndarray:
+    return np.minimum(plan.block, plan.out_feats[j] - o * plan.block)
+
+
+# VMEM budget for a backward kernel's scratch + resident input tiles.
+# Real-TPU VMEM is ~16 MiB/core; leave headroom for Mosaic's own double
+# buffering of the streamed value blocks.
+_VMEM_BUDGET_BYTES = 12 * 2**20
+
+
+def fit_bt(plan: ChainPlan, bt: int, elt: int, *, wgrad: bool) -> int:
+    """Largest power-of-two divisor of ``bt`` (≥ 8) whose backward-kernel
+    footprint fits the VMEM budget.  The forward pads the batch to a
+    multiple of ``bt``, so any divisor still tiles it exactly.  Unlike the
+    forward kernel (one ping-pong pair in x dtype), the backward holds f32
+    cotangent slabs — and wgrad additionally every factor's input
+    activation plus both edge tiles — so wide chains (large
+    ``max_blocks``) must shrink the batch tile instead of overflowing
+    VMEM at kernel compile time."""
+    blk = plan.block
+    # resident edge tiles: dy in + dx out (dgrad) / x + dy in (wgrad)
+    edge_blocks = plan.in_blocks[0] + plan.out_blocks[-1]
+    while bt > 8:
+        scratch = 2 * plan.max_blocks * bt * blk * 4  # cotangent ping-pong
+        if wgrad:
+            scratch += (sum(plan.in_blocks) + 1) * bt * blk * 4
+        if scratch + bt * edge_blocks * blk * elt <= _VMEM_BUDGET_BYTES:
+            break
+        bt //= 2
+    return max(bt, 8)
+
+
+@functools.lru_cache(maxsize=64)
+def _dgrad_meta_static(plan: ChainPlan) -> np.ndarray:
+    """Static dgrad columns (1..4), rows already in reversed step order."""
+    rows = []
+    for j in range(plan.n_factors):
+        o_count, k_count = plan.out_blocks[j], plan.k_blocks[j]
+        o = np.repeat(np.arange(o_count), k_count)
+        cols = np.empty((o_count * k_count, DGRAD_META_COLS - 1), dtype=np.int32)
+        cols[:, 0] = o  # src_blk
+        cols[:, 1] = (plan.n_factors - 1 - j) % 2  # parity (source buffer)
+        start = np.zeros(o_count * k_count, dtype=np.int32)
+        start[-1] = 1  # last flat step of factor j == first reversed step
+        cols[:, 2] = start
+        cols[:, 3] = _ncols(plan, j, o)
+        rows.append(cols)
+    return np.concatenate(rows, axis=0)[::-1].copy()
+
+
+def dgrad_meta(plan: ChainPlan, in_idx: Array) -> Array:
+    """(S, DGRAD_META_COLS) reversed step table: runtime ``in_idx`` (reversed)
+    in column 0, static columns after it."""
+
+    def build():
+        static = jnp.asarray(_dgrad_meta_static(plan))
+        dst = in_idx[::-1].astype(jnp.int32)[:, None]
+        return jnp.concatenate([dst, static], axis=1)
+
+    return cached_table(plan, in_idx, "dgrad", build)
+
+
+def _act_offsets(plan: ChainPlan) -> tuple[int, ...]:
+    """Flat-scratch offset of each factor's *input* activation blocks."""
+    offs = [0]
+    for ib in plan.in_blocks:
+        offs.append(offs[-1] + ib)
+    return tuple(offs)
+
+
+@functools.lru_cache(maxsize=64)
+def _wgrad_meta_static(plan: ChainPlan) -> np.ndarray:
+    """Static wgrad columns (1..6): ``S_pre`` forward-recompute rows for
+    factors ``0..J-2`` followed by ``S`` reversed cotangent-walk rows."""
+    actoff = _act_offsets(plan)
+    fwd = []
+    for j in range(plan.n_factors - 1):  # last factor's output is unused
+        o_count, k_count = plan.out_blocks[j], plan.k_blocks[j]
+        o = np.repeat(np.arange(o_count), k_count)
+        k = np.tile(np.arange(k_count), o_count)
+        cols = np.empty((o_count * k_count, WGRAD_META_COLS - 1), dtype=np.int32)
+        cols[:, 0] = o  # out_blk
+        cols[:, 1] = k == 0  # is_k0
+        cols[:, 2] = k == k_count - 1  # is_kend
+        cols[:, 3] = _ncols(plan, j, o)
+        cols[:, 4] = actoff[j]  # act_off_in
+        cols[:, 5] = actoff[j + 1]  # act_off_out
+        fwd.append(cols)
+    bwd = []
+    for j in range(plan.n_factors):
+        o_count, k_count = plan.out_blocks[j], plan.k_blocks[j]
+        o = np.repeat(np.arange(o_count), k_count)
+        cols = np.empty((o_count * k_count, WGRAD_META_COLS - 1), dtype=np.int32)
+        cols[:, 0] = o  # src_blk
+        cols[:, 1] = (plan.n_factors - 1 - j) % 2  # parity
+        start = np.zeros(o_count * k_count, dtype=np.int32)
+        start[-1] = 1
+        cols[:, 2] = start  # is_j0
+        cols[:, 3] = _ncols(plan, j, o)
+        cols[:, 4] = actoff[j]  # act_off_j
+        cols[:, 5] = int(j > 0)  # propagate
+        bwd.append(cols)
+    bwd_rows = np.concatenate(bwd, axis=0)[::-1]
+    parts = fwd + [bwd_rows]
+    return np.concatenate(parts, axis=0).copy()
+
+
+def wgrad_meta(plan: ChainPlan, in_idx: Array) -> Array:
+    """(S_pre + S, WGRAD_META_COLS) two-phase step table: forward-recompute
+    rows carry the forward ``in_idx``, walk rows the reversed one."""
+
+    def build():
+        static = jnp.asarray(_wgrad_meta_static(plan))
+        s_pre = plan.offsets[plan.n_factors - 1]
+        idx = jnp.concatenate(
+            [in_idx[:s_pre], in_idx[::-1]]
+        ).astype(jnp.int32)[:, None]
+        return jnp.concatenate([idx, static], axis=1)
+
+    return cached_table(plan, in_idx, "wgrad", build)
+
+
+# ---------------------------------------------------------------------------
+# dgrad kernel
+# ---------------------------------------------------------------------------
+
+
+def _dgrad_kernel(
+    meta_ref, dy_ref, v_ref, o_ref, cot_ref, *, n_out_last, n_in0, blk, n_steps,
+    out_par,
+):
+    t = pl.program_id(1)
+    dst = meta_ref[t, 0]
+    src = meta_ref[t, 1]
+    par = meta_ref[t, 2]
+
+    @pl.when(t == 0)
+    def _load_dy():
+        # Stage the dy tile into the chain-end cotangent buffer (parity 0
+        # by the (J-1-j)%2 convention), block-major, f32.
+        for b in range(n_out_last):
+            cot_ref[0, b] = dy_ref[:, b * blk : (b + 1) * blk].astype(jnp.float32)
+
+    @pl.when(meta_ref[t, 3] == 1)
+    def _open_factor():
+        # Scatter target of a fresh factor: blocks never written must read 0.
+        cot_ref[1 - par] = jnp.zeros(cot_ref.shape[1:], cot_ref.dtype)
+
+    cols = jax.lax.broadcasted_iota(jnp.int32, cot_ref.shape[2:], 1)
+    g = jnp.where(cols < meta_ref[t, 4], cot_ref[par, src], 0.0)
+    # g @ F[s]ᵀ — the transposed block read straight off the packed layout
+    cot_ref[1 - par, dst] += jax.lax.dot_general(
+        g, v_ref[0], (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(t == n_steps - 1)
+    def _to_out():
+        for b in range(n_in0):
+            o_ref[:, b * blk : (b + 1) * blk] = cot_ref[out_par, b].astype(
+                o_ref.dtype
+            )
+
+
+def chain_dgrad(
+    dy: Array,
+    values: Array,
+    in_idx: Array,
+    *,
+    plan: ChainPlan,
+    bt: int = 128,
+    interpret: bool = False,
+) -> Array:
+    """Fused ``dx = dy @ F_Jᵀ @ ... @ F_1ᵀ`` in a single ``pallas_call``.
+
+    ``dy``: (B, O_J·blk) with B % bt == 0 (the cotangent of the *padded*
+    forward output — ragged tails are re-masked in-kernel either way).
+    Returns (B, IB_1·blk), the cotangent of the padded forward input.
+    """
+    b, out_w = dy.shape
+    blk = plan.block
+    rev = plan.reverse()  # the transposed chain this kernel walks
+    n_steps = plan.n_steps
+    assert b % bt == 0, (b, bt)
+    bt = fit_bt(plan, bt, jnp.dtype(dy.dtype).itemsize, wgrad=False)
+    assert out_w == rev.in_blocks[0] * blk, (out_w, rev.in_blocks[0], blk)
+    assert values.shape == (n_steps, blk, blk), values.shape
+    meta = dgrad_meta(plan, in_idx)
+    in_pad = rev.out_blocks[-1] * blk
+    grid = (b // bt, n_steps)
+
+    return pl.pallas_call(
+        functools.partial(
+            _dgrad_kernel,
+            n_out_last=rev.in_blocks[0],
+            n_in0=rev.out_blocks[-1],
+            blk=blk,
+            n_steps=n_steps,
+            out_par=plan.n_factors % 2,
+        ),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bt, out_w), lambda bi, t, meta: (bi, 0)),
+                # the t-th reversed flat block — streams with double buffering
+                pl.BlockSpec(
+                    (1, blk, blk), lambda bi, t, meta: (n_steps - 1 - t, 0, 0)
+                ),
+            ],
+            out_specs=pl.BlockSpec((bt, in_pad), lambda bi, t, meta: (bi, 0)),
+            scratch_shapes=[
+                # cotangent ping-pong, f32 (scatter-accumulated in place)
+                pltpu.VMEM((2, rev.max_blocks, bt, blk), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, in_pad), dy.dtype),
+        interpret=interpret,
+    )(meta, dy, values)
+
+
+# ---------------------------------------------------------------------------
+# wgrad kernel
+# ---------------------------------------------------------------------------
+
+
+def _wgrad_kernel(
+    meta_ref, x_ref, dy_ref, v_ref, o_ref, acts_ref, cot_ref, acc_ref, *, s_pre,
+    n_in0, n_out_last, blk,
+):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _load_x():
+        for b in range(n_in0):
+            acts_ref[b] = x_ref[:, b * blk : (b + 1) * blk].astype(jnp.float32)
+
+    @pl.when(t < s_pre)
+    def _recompute():
+        # Forward step (factors 0..J-2), identical framing to the forward
+        # kernel; flushes land in the flat per-factor activation scratch.
+        @pl.when(meta_ref[t, 2] == 1)
+        def _open():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        acc_ref[...] += jnp.dot(
+            acts_ref[meta_ref[t, 5] + meta_ref[t, 0]],
+            v_ref[0],
+            preferred_element_type=jnp.float32,
+        )
+
+        @pl.when(meta_ref[t, 3] == 1)
+        def _flush():
+            cols = jax.lax.broadcasted_iota(jnp.int32, acc_ref.shape, 1)
+            acts_ref[meta_ref[t, 6] + meta_ref[t, 1]] = jnp.where(
+                cols < meta_ref[t, 4], acc_ref[...], 0.0
+            )
+
+    @pl.when(t == s_pre)
+    def _load_dy():
+        for b in range(n_out_last):
+            cot_ref[0, b] = dy_ref[:, b * blk : (b + 1) * blk].astype(jnp.float32)
+
+    @pl.when(t >= s_pre)
+    def _walk():
+        dst = meta_ref[t, 0]
+        src = meta_ref[t, 1]
+        par = meta_ref[t, 2]
+
+        @pl.when(meta_ref[t, 3] == 1)
+        def _open_factor():
+            cot_ref[1 - par] = jnp.zeros(cot_ref.shape[1:], cot_ref.dtype)
+
+        cols = jax.lax.broadcasted_iota(jnp.int32, cot_ref.shape[2:], 1)
+        g = jnp.where(cols < meta_ref[t, 4], cot_ref[par, src], 0.0)
+        # per-slot cotangent block: a_jᵀ @ g  (blk × blk), written once
+        o_ref[0, 0] = jax.lax.dot_general(
+            acts_ref[meta_ref[t, 5] + dst],
+            g,
+            (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+        @pl.when(meta_ref[t, 6] == 1)
+        def _propagate():
+            cot_ref[1 - par, dst] += jax.lax.dot_general(
+                g,
+                v_ref[0],
+                (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+
+
+def chain_wgrad(
+    x: Array,
+    dy: Array,
+    values: Array,
+    in_idx: Array,
+    *,
+    plan: ChainPlan,
+    bt: int = 128,
+    interpret: bool = False,
+) -> Array:
+    """Fused per-slot weight cotangent ``dvalues (S, blk, blk)`` in a single
+    ``pallas_call`` (forward recompute + reversed cotangent walk — see the
+    module docstring).  ``x``/``dy`` are the padded forward input/output
+    cotangent, B % bt == 0.  Returns f32 (cast by the caller) — partial
+    per-tile slabs are summed here when B > bt.
+    """
+    b, in_w = x.shape
+    blk = plan.block
+    n_steps = plan.n_steps
+    s_pre = plan.offsets[plan.n_factors - 1]
+    assert b % bt == 0, (b, bt)
+    bt = fit_bt(plan, bt, jnp.dtype(x.dtype).itemsize, wgrad=True)
+    assert dy.shape == (b, plan.out_blocks[-1] * blk), dy.shape
+    assert values.shape == (n_steps, blk, blk), values.shape
+    meta = wgrad_meta(plan, in_idx)
+    n_tiles = b // bt
+    out_w = plan.out_blocks[-1] * blk
+    grid = (n_tiles, s_pre + n_steps)
+
+    def _v_index(bi, t, meta):
+        return (jnp.where(t < s_pre, t, s_pre + n_steps - 1 - t), 0, 0)
+
+    def _o_index(bi, t, meta):
+        # forward-phase steps park on the first walk block (S-1) so no
+        # unwritten buffer is ever flushed; walk step t emits flat block
+        # S-1-(t-s_pre)
+        return (bi, jnp.where(t < s_pre, n_steps - 1, s_pre + n_steps - 1 - t), 0, 0)
+
+    partials = pl.pallas_call(
+        functools.partial(
+            _wgrad_kernel,
+            s_pre=s_pre,
+            n_in0=plan.in_blocks[0],
+            n_out_last=plan.out_blocks[-1],
+            blk=blk,
+        ),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bt, in_w), lambda bi, t, meta: (bi, 0)),
+                pl.BlockSpec((bt, out_w), lambda bi, t, meta: (bi, 0)),
+                pl.BlockSpec((1, blk, blk), _v_index),
+            ],
+            out_specs=pl.BlockSpec((1, 1, blk, blk), _o_index),
+            scratch_shapes=[
+                # every factor's input activation, flat (recompute target)
+                pltpu.VMEM((sum(plan.in_blocks), bt, blk), jnp.float32),
+                # cotangent ping-pong for the walk
+                pltpu.VMEM((2, plan.max_blocks, bt, blk), jnp.float32),
+                # forward-phase f32 accumulator
+                pltpu.VMEM((bt, blk), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_tiles, n_steps, blk, blk), jnp.float32),
+        interpret=interpret,
+    )(meta, x, dy, values)
+    return partials[0] if n_tiles == 1 else partials.sum(axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Reference oracle (the pre-fusion rematerializing walk)
+# ---------------------------------------------------------------------------
+
+
+def chain_bwd_ref(
+    x: Array, values: Array, in_idx: Array, dy: Array, *, plan: ChainPlan
+) -> tuple[Array, Array]:
+    """Step-exact jnp oracle for (dgrad, wgrad): rematerialize the
+    per-factor activations with the reference einsums and walk the chain
+    backwards (identical to XLA autodiff of ``ref.packed_chain_ref``).
+    Pays the per-boundary HBM round-trips the kernels avoid — kept as the
+    parity target and the ``REPRO_CHAIN_BWD=ref`` fallback."""
+    blk = plan.block
+    acts = [x]
+    y = x
+    for j in range(plan.n_factors - 1):
+        vj, ij = _ref.factor_slices(values, in_idx, plan, j)
+        y = _ref._mask_tail(_ref.bsr_matmul_ref(y, vj, ij), plan.out_feats[j])
+        acts.append(y)
+    g = dy
+    dvals = []
+    for j in reversed(range(plan.n_factors)):
+        vj, ij = _ref.factor_slices(values, in_idx, plan, j)
+        # forward zeroed the ragged tail, so its cotangent is dropped too
+        g = _ref._mask_tail(g, plan.out_feats[j])
+        dvals.append(
+            _ref.bsr_matmul_dvalues(acts[j], g, ij, (blk, blk)).reshape(-1, blk, blk)
+        )
+        g = _ref.bsr_matmul_dx(g, vj, ij, plan.in_blocks[j] * blk)
+    dvalues = jnp.concatenate(dvals[::-1], axis=0)
+    return g, dvalues

@@ -30,6 +30,16 @@ it never errors.
 The resulting :class:`ShardPlan` also prices itself for the dispatch cost
 model (``repro.api.dispatch``): per-shard flops/HBM bytes plus the ICI
 bytes of each boundary all-gather — see EXPERIMENTS.md §Sharded apply.
+
+**Backward.** The sharded apply is differentiable end to end with the
+same collective structure transposed: each fused segment runs under the
+``_chain_pallas`` ``custom_vjp``, so its backward is the fused dgrad +
+wgrad kernel pair of ``kernels/chain_bwd.py`` *per shard* (≤ 2 launches
+per segment, activations recomputed in VMEM), and JAX transposes every
+boundary ``all_gather`` into a ``reduce_scatter`` of the boundary
+cotangent — collectives appear at exactly the crossing boundaries in the
+backward too, and only there.  Parity vs the single-device backward is
+gated in ``tests/test_sharded_apply.py``.
 """
 from __future__ import annotations
 
@@ -333,8 +343,9 @@ def _plan_shard(bf, mesh, data_axis, model_axis) -> ShardPlan:
 
 
 def _seg_apply(y, seg_vals, seg_idx, plan, use_kernel, bt, interpret):
-    """One fused segment on the local shard — Pallas kernel (with its
-    custom VJP) or the step-exact jnp oracle off-TPU."""
+    """One fused segment on the local shard — Pallas kernel (whose
+    ``custom_vjp`` is the fused dgrad/wgrad pair of ``chain_bwd.py``) or
+    the step-exact jnp oracle off-TPU (XLA autodiff)."""
     if use_kernel:
         from repro.kernels.ops import _chain_pallas
 

@@ -11,16 +11,21 @@ These are the kernel-level entry points; backend *selection* (dense vs
 per-factor vs fused, cost-model driven) lives one level up in
 ``repro.api`` (``FaustOp.apply(x, backend=...)``).
 
-Both Pallas paths carry a ``custom_vjp`` whose backward pass uses the
-gather/scatter einsum forms from ``ref.py`` (identical to XLA's autodiff of
-the reference), so FAµST layers are trainable on every path.  The fused
-backward *rematerializes* the per-factor activations with the reference
-oracle (they never left VMEM in the forward, so there is nothing to save —
-checkpoint-style recompute keeps the memory win).
+Both Pallas paths carry a ``custom_vjp``, so FAµST layers are trainable on
+every path.  The single-factor backward uses the gather/scatter einsum
+forms from ``ref.py`` (identical to XLA's autodiff of the reference); the
+fused chain backward runs the **fused Pallas kernels** of
+``kernels/chain_bwd.py`` — a dgrad launch (the transposed chain, reversed
+step table) plus a wgrad launch (forward recompute in VMEM scratch +
+reversed cotangent walk), ≤ 2 launches for any J with zero HBM activation
+traffic.  ``REPRO_CHAIN_BWD=ref`` routes the backward through the
+rematerializing reference walk instead (``chain_bwd.chain_bwd_ref``, the
+step-exact oracle the kernels are tested against).
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +35,12 @@ from repro.core.compress import BlockFaust, BlockSparseFactor, ChainPlan, Packed
 from repro.kernels import ref as _ref
 from repro.kernels.bsr_matmul import bsr_matmul
 from repro.kernels.chain import META_COLS, chain_matmul
+from repro.kernels.chain_bwd import (
+    cached_table,
+    chain_bwd_ref,
+    chain_dgrad,
+    chain_wgrad,
+)
 
 Array = jax.Array
 
@@ -88,9 +99,18 @@ def _chain_meta_static(plan: ChainPlan) -> np.ndarray:
 
 def chain_meta(plan: ChainPlan, in_idx: Array) -> Array:
     """Assemble the (S, META_COLS) scalar-prefetch step table: runtime
-    ``in_idx`` in column 0, static plan-derived columns after it."""
-    static = jnp.asarray(_chain_meta_static(plan))
-    return jnp.concatenate([in_idx[:, None].astype(jnp.int32), static], axis=1)
+    ``in_idx`` in column 0, static plan-derived columns after it.
+
+    The assembled table is cached per ``(plan, in_idx identity)``
+    (``chain_bwd.cached_table``) so repeated eager applies of the same
+    operator do zero per-call host work; under tracing the concatenate is
+    staged as before."""
+
+    def build():
+        static = jnp.asarray(_chain_meta_static(plan))
+        return jnp.concatenate([in_idx[:, None].astype(jnp.int32), static], axis=1)
+
+    return cached_table(plan, in_idx, "fwd", build)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
@@ -107,29 +127,20 @@ def _chain_pallas_fwd(x, values, in_idx, plan, bt, interpret):
 
 def _chain_pallas_bwd(plan, bt, interpret, res, dy):
     x, values, in_idx = res
-    blk = plan.block
-    # Rematerialize the per-factor inputs (the fused forward keeps them in
-    # VMEM scratch only) with the reference oracle, then walk the chain
-    # backwards with the gather/scatter einsum forms.
-    acts = [x]
-    y = x
-    for j in range(plan.n_factors - 1):
-        vj, ij = _ref.factor_slices(values, in_idx, plan, j)
-        y = _ref._mask_tail(_ref.bsr_matmul_ref(y, vj, ij), plan.out_feats[j])
-        acts.append(y)
-    g = dy
-    dvals = []
-    for j in reversed(range(plan.n_factors)):
-        vj, ij = _ref.factor_slices(values, in_idx, plan, j)
-        # forward zeroed the ragged tail, so its cotangent is dropped too
-        g = _ref._mask_tail(g, plan.out_feats[j])
-        dvals.append(
-            _ref.bsr_matmul_dvalues(acts[j], g, ij, (blk, blk)).reshape(-1, blk, blk)
-        )
-        g = _ref.bsr_matmul_dx(g, vj, ij, plan.in_blocks[j] * blk)
-    dvalues = jnp.concatenate(dvals[::-1], axis=0)
+    if os.environ.get("REPRO_CHAIN_BWD") == "ref":
+        # escape hatch / oracle: the pre-fusion rematerializing einsum walk
+        dx, dvalues = chain_bwd_ref(x, values, in_idx, dy, plan=plan)
+    else:
+        # fused backward: one dgrad launch (transposed chain) + one wgrad
+        # launch (VMEM recompute + cotangent walk) — see kernels/chain_bwd.py
+        dx = chain_dgrad(
+            dy, values, in_idx, plan=plan, bt=bt, interpret=interpret
+        ).astype(x.dtype)
+        dvalues = chain_wgrad(
+            x, dy, values, in_idx, plan=plan, bt=bt, interpret=interpret
+        ).astype(values.dtype)
     d_idx = np.zeros(in_idx.shape, dtype=jax.dtypes.float0)
-    return g, dvalues, d_idx
+    return dx, dvalues, d_idx
 
 
 _chain_pallas.defvjp(_chain_pallas_fwd, _chain_pallas_bwd)

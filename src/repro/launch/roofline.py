@@ -16,18 +16,71 @@ Notes recorded alongside the numbers:
     the device count where appropriate;
   * conditionals (gemma3's local/global branches never appear — patterns
     are static) — conditionals if present are counted max-branch.
+
+Peak constants: builtin TPU-v5e numbers by default, replaced by
+*measured* values when ``scripts/calibrate_roofline.py`` has cached a
+``roofline.json`` for this host (``~/.cache/repro/roofline.json``;
+``REPRO_ROOFLINE`` overrides the path, ``REPRO_ROOFLINE=builtin`` forces
+the defaults).  :data:`ROOFLINE_SOURCE` records which was loaded — the
+dispatch layer stamps it on every :class:`~repro.api.dispatch.DispatchReport`
+so benchmark rows say what roofline priced them.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 import re
 from collections import defaultdict
 
 import numpy as np
 
-PEAK_FLOPS = 197e12  # bf16 / chip (TPU v5e)
-HBM_BW = 819e9  # bytes/s / chip
-LINK_BW = 50e9  # bytes/s / link (ICI)
+_BUILTIN = {
+    "peak_flops": 197e12,  # bf16 / chip (TPU v5e)
+    "hbm_bw": 819e9,  # bytes/s / chip
+    "link_bw": 50e9,  # bytes/s / link (ICI)
+    "t_launch_us": 2.0,  # fixed per-launch overhead (µs)
+}
+
+
+def roofline_cache_path() -> str:
+    """Where calibration results live (shared with the calibrate script)."""
+    return os.environ.get(
+        "REPRO_ROOFLINE",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro", "roofline.json"),
+    )
+
+
+def load_roofline() -> tuple[dict, str]:
+    """(constants dict, source) — measured values from the calibration
+    cache when present and sane, builtin TPU-v5e numbers otherwise.
+    Unknown/invalid keys fall back individually, so a partial cache still
+    contributes what it measured."""
+    path = roofline_cache_path()
+    if path.lower() in ("", "0", "builtin", "off"):
+        return dict(_BUILTIN), "builtin"
+    try:
+        with open(path, encoding="utf-8") as f:
+            data = json.load(f)
+        if not isinstance(data, dict):
+            return dict(_BUILTIN), "builtin"
+        measured = {
+            k: float(data[k])
+            for k in _BUILTIN
+            if isinstance(data.get(k), (int, float)) and float(data[k]) > 0
+        }
+        if not measured:
+            return dict(_BUILTIN), "builtin"
+        return {**_BUILTIN, **measured}, f"measured:{path}"
+    except (OSError, ValueError):
+        return dict(_BUILTIN), "builtin"
+
+
+_VALUES, ROOFLINE_SOURCE = load_roofline()
+PEAK_FLOPS = _VALUES["peak_flops"]
+HBM_BW = _VALUES["hbm_bw"]
+LINK_BW = _VALUES["link_bw"]
+T_LAUNCH_US = _VALUES["t_launch_us"]
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,

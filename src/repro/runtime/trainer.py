@@ -214,6 +214,10 @@ class Trainer:
         self.step_fn = make_train_step(cfg, opt_cfg, tcfg, mesh)
         self._preempted = False
         self.history: list[dict] = []
+        # the FAµST backend decision staged into the training step (the
+        # dispatch layer prices fwd+bwd jointly under jax.grad — see
+        # repro.api.dispatch); captured after the first step's trace
+        self.faust_dispatch = None
 
     # -- fault-tolerance hooks -------------------------------------------------
     def _install_signal_handlers(self):
@@ -250,8 +254,21 @@ class Trainer:
         ewma = None
         for step_idx in range(start_step, self.tcfg.steps):
             batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+            capture = step_idx == start_step and self.faust_dispatch is None
+            if capture:
+                from repro.api import last_report
+
+                pre_step = last_report()
             t0 = time.monotonic()
             state, metrics = self.step_fn(state, batch)
+            if capture:
+                rep = last_report()
+                # only a report staged by *this* step's trace counts — a
+                # warm jit cache (or a FAµST-free model) leaves the
+                # process-global last_report() untouched
+                if rep is not None and rep is not pre_step and rep.grad:
+                    self.faust_dispatch = rep
+                    log.info("faust training dispatch: %s", rep.reason)
             metrics = {k: float(v) for k, v in metrics.items()}
             dt = time.monotonic() - t0
             # straggler detection (per-step EWMA)

@@ -312,6 +312,46 @@ def test_dispatch_dense_when_rcg_below_one():
     assert last_report().backend != "dense", last_report()
 
 
+def test_dispatch_grad_pricing_joint_fwd_bwd():
+    """grad=True prices forward+backward jointly: a chain with heavy
+    boundary activation traffic keeps fused ahead of bsr at fine-tuning
+    batch (no wgrad spill) while huge batches tip to bsr (the f32
+    partial-dvalues slabs outweigh the saved round-trips)."""
+    op = FaustOp.from_blockfaust(_chain(40, [8, 8, 32], k=4, blk=128))
+    kw = dict(
+        shape=op.shape, dtype=jnp.float32, s_tot=op.s_tot,
+        inner_dims=op.inner_dims(), n_factors=op.n_factors,
+        feasible=op.feasible_backends(),
+    )
+    small = choose_backend(batch=128, grad=True, **kw)
+    assert small.grad and small.backend == "fused", small.reason
+    assert "fwd+bwd" in small.reason
+    big = choose_backend(batch=4096, grad=True, **kw)
+    assert big.backend == "bsr", big.reason
+    # joint estimates strictly dominate the fwd-only ones
+    fwd_only = choose_backend(batch=128, grad=False, **kw)
+    assert not fwd_only.grad
+    assert all(
+        small.est_us[k] > fwd_only.est_us[k] for k in fwd_only.est_us
+    )
+    assert small.as_row()["grad"] is True
+    assert small.as_row()["roofline"] == small.roofline
+
+
+def test_apply_autodetects_ad_trace():
+    """FaustOp.apply flips to grad pricing under jax.grad with no call-site
+    change, and stays on fwd pricing for plain jit/inference."""
+    op = FaustOp.from_blockfaust(_chain(41, [4, 4, 4], k=2))
+    x = jax.random.normal(jax.random.PRNGKey(42), (8, op.shape[0]))
+    jax.jit(lambda v: op.apply(v, use_kernel=False))(x)
+    assert last_report().grad is False
+    jax.grad(lambda v: op.apply(v, use_kernel=False).sum())(x)
+    assert last_report().grad is True
+    # explicit override wins over detection
+    op.apply(x, use_kernel=False, grad=True)
+    assert last_report().grad is True
+
+
 def test_dispatch_adjoint_has_no_fused_path(op_block):
     assert "fused" not in op_block.T.feasible_backends()
     op_block.T.apply(

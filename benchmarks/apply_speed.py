@@ -83,6 +83,19 @@ def run(cases=((1024, 4096, 2, 4, 128), (2048, 8192, 2, 4, 128), (2048, 8192, 3,
         auto_fn = jax.jit(lambda v: op.apply(v, backend="auto", use_kernel=False))
         y_auto = auto_fn(x)
         report = last_report()  # decision staged by the auto trace
+        # acceptance gate for the autotune layer: on a measured table hit
+        # the auto pick must BE the measured-fastest feasible backend —
+        # no more model mispricings (the apply_2048x8192_J3 0.8×-speedup
+        # pick) surviving where a real timing exists
+        if report.source == "measured":
+            fastest = min(report.est_us, key=report.est_us.get)
+            if report.backend != fastest:
+                raise RuntimeError(
+                    f"measured dispatch inconsistent "
+                    f"({in_dim}x{out_dim} J{n_factors}): picked "
+                    f"{report.backend}, table-fastest {fastest} "
+                    f"({report.est_us})"
+                )
         y_perfac, y_fused = perfac_fn(x), fused_fn(x)
         # acceptance gate: one operator, one answer, whatever the backend
         parity = max(_rel(y_fused, y_perfac), _rel(y_auto, y_perfac))
@@ -119,7 +132,8 @@ def run(cases=((1024, 4096, 2, 4, 128), (2048, 8192, 2, 4, 128), (2048, 8192, 3,
             f"fused_us={t_fused:.1f};pallas_calls={n_calls_perfac}->{n_calls_fused};"
             f"speedup={t_dense / max(t_faust, 1e-9):.2f};"
             f"RCG={rcg:.2f};flop_gain={dense_flops / faust_flops:.2f};"
-            f"auto_backend={report.backend};parity={parity:.1e};"
+            f"auto_backend={report.backend};"
+            f"dispatch_source={report.source};parity={parity:.1e};"
             f"tpu_roofline_gain={t_tpu_dense / t_tpu_fused:.2f};"
             f"tpu_fuse_gain={t_tpu_perfac / t_tpu_fused:.2f};"
             f"interpret={int(interpret)}",
@@ -283,6 +297,7 @@ def run_grad(
             f"remat_over_fused={t_remat / max(t_fused, 1e-9):.2f};"
             f"bwd_pallas_calls={n_calls - 1};"
             f"grad_parity={parity:.1e};auto_grad_backend={report.backend};"
+            f"dispatch_source={report.source};"
             f"tpu_grad_fuse_gain={grad_fuse_gain:.2f};"
             f"interpret={int(interpret)}",
             dispatch=report,

@@ -20,9 +20,19 @@ absent/invalid) and every ``DispatchReport`` records which source priced
 it in its ``roofline`` field.  Delete the cache file or set
 ``REPRO_ROOFLINE=builtin`` to return to host-independent decisions.
 
+``--autotune`` instead pre-populates the **measured-timings dispatch
+table** (``repro.api.autotune``; ``~/.cache/repro/autotune.json``,
+``REPRO_AUTOTUNE_TABLE`` override) over the benchmark shapes of
+``benchmarks/apply_speed.py`` — forward *and* grad keys — so
+``backend="auto"`` decisions prefer real host timings on those shapes
+from the next dispatch on (``DispatchReport.source == "measured"``).
+See EXPERIMENTS.md §Autotuned dispatch.
+
 Usage::
 
     PYTHONPATH=src python scripts/calibrate_roofline.py [--out PATH]
+    PYTHONPATH=src python scripts/calibrate_roofline.py --autotune \
+        [--cases "1024,4096,2,4,128;2048,8192,3,4,128"] [--batch 128]
 """
 from __future__ import annotations
 
@@ -39,6 +49,14 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro.launch.roofline import _BUILTIN, roofline_cache_path  # noqa: E402
+
+# the shapes benchmarks/apply_speed.py runs — the autotune table rows
+# BENCH comparisons care about
+BENCH_CASES = (
+    (1024, 4096, 2, 4, 128),
+    (2048, 8192, 2, 4, 128),
+    (2048, 8192, 3, 4, 128),
+)
 
 
 def _median_s(fn, n_warmup: int = 3, n_iter: int = 10) -> float:
@@ -101,6 +119,60 @@ def calibrate() -> dict:
     return record
 
 
+def _parse_cases(spec: str | None):
+    if not spec:
+        return BENCH_CASES
+    cases = []
+    for part in spec.split(";"):
+        part = part.strip()
+        if not part:
+            continue
+        vals = tuple(int(t) for t in part.split(","))
+        if len(vals) != 5:
+            raise SystemExit(
+                f"--cases entries are 'in,out,J,k,block' 5-tuples; got {part!r}"
+            )
+        cases.append(vals)
+    return tuple(cases)
+
+
+def autotune_table(cases, batch: int, grad: bool = True) -> None:
+    """Measure every (case × fwd/grad) dispatch key into the autotune
+    table (existing entries are kept — delete the file to re-measure)."""
+    from repro.api import FaustOp, autotune
+    from repro.core.compress import BlockFaust, random_block_factor
+
+    on_tpu = jax.default_backend() == "tpu"
+    print(f"autotune table: {autotune.table_path()}")
+    for in_dim, out_dim, n_factors, blocks_k, block in cases:
+        # mirror benchmarks/apply_speed._chain_case so the table rows key
+        # exactly the shapes the BENCH suite dispatches
+        keys = jax.random.split(jax.random.PRNGKey(0), n_factors)
+        dims = [in_dim] + [min(in_dim, out_dim)] * (n_factors - 1) + [out_dim]
+        factors = tuple(
+            random_block_factor(
+                keys[i], dims[i], dims[i + 1], block, block, blocks_k
+            )
+            for i in range(n_factors)
+        )
+        op = FaustOp.from_blockfaust(BlockFaust(factors, jnp.asarray(1.0)))
+        x = jax.random.normal(jax.random.PRNGKey(1), (batch, in_dim))
+        for g in ((False, True) if grad else (False,)):
+            entry = autotune.ensure_measured(
+                op, x,
+                batch=batch, dtype=x.dtype, grad=g, mesh_shape=None,
+                use_kernel=True, interpret=not on_tpu,
+            )
+            kind = "grad" if g else "fwd"
+            print(
+                f"  {in_dim}x{out_dim} J{n_factors} b{batch} {kind}: "
+                f"best={entry['best']}"
+                + (f" bt={entry['bt']}" if "bt" in entry else "")
+                + " us=" + json.dumps(entry["us"])
+            )
+    autotune.reload()  # in-process consumers see the fresh table now
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument(
@@ -108,7 +180,28 @@ def main() -> None:
         default=None,
         help="cache path (default: REPRO_ROOFLINE or ~/.cache/repro/roofline.json)",
     )
+    ap.add_argument(
+        "--autotune", action="store_true",
+        help="pre-populate the measured dispatch table instead of "
+             "calibrating roofline constants",
+    )
+    ap.add_argument(
+        "--cases", default=None,
+        help="autotune shapes, ';'-separated 'in,out,J,k,block' 5-tuples "
+             "(default: the apply_speed benchmark cases)",
+    )
+    ap.add_argument(
+        "--batch", type=int, default=128,
+        help="autotune apply batch (default 128, the benchmark batch)",
+    )
+    ap.add_argument(
+        "--no-grad", action="store_true",
+        help="autotune forward keys only (skip the grad measurements)",
+    )
     args = ap.parse_args()
+    if args.autotune:
+        autotune_table(_parse_cases(args.cases), args.batch, not args.no_grad)
+        return
     out = args.out or roofline_cache_path()
     if out.lower() in ("", "0", "builtin", "off"):
         raise SystemExit(
@@ -123,6 +216,12 @@ def main() -> None:
     for k in ("peak_flops", "hbm_bw", "link_bw", "t_launch_us"):
         tag = " (builtin)" if k == "link_bw" else ""
         print(f"  {k:12s} = {record[k]:.4g}{tag}  (builtin {_BUILTIN[k]:.4g})")
+    if not args.out:
+        # the dispatch cost model reads through this live accessor — make
+        # the calibration we just wrote effective in-process immediately
+        from repro.launch import roofline
+
+        roofline.reload()
 
 
 if __name__ == "__main__":

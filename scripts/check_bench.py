@@ -44,7 +44,7 @@ def load_rows(path: str) -> dict[str, float]:
     }
 
 
-def main() -> int:
+def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("new", help="freshly produced run.py --json output")
     ap.add_argument(
@@ -52,7 +52,7 @@ def main() -> int:
     )
     ap.add_argument("--threshold", type=float, default=0.25)
     ap.add_argument("--min-us", type=float, default=100_000.0)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     base = load_rows(args.baseline)
     new = load_rows(args.new)

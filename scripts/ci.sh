@@ -32,7 +32,11 @@ if ! python scripts/check_docs.py; then
     exit 1
 fi
 
-out=$(PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout "$CI_TIMEOUT" \
+# REPRO_AUTOTUNE=off on the tier-1 and bench legs: decisions must stay
+# host-independent, model-priced (any autotune table this host has built
+# would otherwise steer backend="auto" assertions and BENCH rows).
+out=$(PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} REPRO_AUTOTUNE=off \
+      timeout "$CI_TIMEOUT" \
       python -m pytest -q tests 2>&1)
 status=$?
 echo "$out" | tail -20
@@ -82,7 +86,7 @@ echo "ci: multi-device leg OK"
 # calibration cache can't shift which backend the rows measure.
 if [ "${REPRO_SKIP_BENCH:-0}" != "1" ]; then
     if ! PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} REPRO_ROOFLINE=builtin \
-        timeout "$CI_TIMEOUT" \
+        REPRO_AUTOTUNE=off timeout "$CI_TIMEOUT" \
         python benchmarks/run.py --only apply_speed,apply_grad \
         --json /tmp/repro_bench_ci.json > /dev/null; then
         echo "ci: BENCH LEG FAILED TO RUN"
@@ -96,4 +100,63 @@ if [ "${REPRO_SKIP_BENCH:-0}" != "1" ]; then
 else
     echo "ci: bench leg skipped (REPRO_SKIP_BENCH=1)"
 fi
+
+# Autotune smoke leg: build a measured table on 2 tiny shapes, assert a
+# dispatch table hit (source == "measured"), then corrupt the file and
+# assert the model fallback — the full mechanics are unit-tested in
+# tests/test_autotune.py; this leg proves the CLI workflow end to end.
+at_table=$(mktemp /tmp/repro_autotune_ci.XXXXXX.json)
+rm -f "$at_table"
+if ! PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} REPRO_ROOFLINE=builtin \
+    REPRO_AUTOTUNE_TABLE="$at_table" REPRO_AUTOTUNE_ITERS=1,2 \
+    REPRO_AUTOTUNE_BT=8,16 timeout "$CI_TIMEOUT" \
+    python scripts/calibrate_roofline.py --autotune --no-grad --batch 16 \
+    --cases "32,32,2,2,8;32,64,2,2,8" > /dev/null; then
+    echo "ci: AUTOTUNE SMOKE (table build) FAILED"
+    rm -f "$at_table"
+    exit 1
+fi
+if ! PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} REPRO_ROOFLINE=builtin \
+    REPRO_AUTOTUNE_TABLE="$at_table" timeout "$CI_TIMEOUT" \
+    python - <<'EOF'
+import json, os, sys
+import jax, jax.numpy as jnp
+from repro.api import FaustOp, dispatch, autotune
+from repro.core.compress import BlockFaust, random_block_factor
+
+def op_for(m, n):
+    ks = jax.random.split(jax.random.PRNGKey(0), 2)
+    dims = [m, min(m, n), n]
+    return FaustOp.wrap(BlockFaust(tuple(
+        random_block_factor(ks[i], dims[i], dims[i + 1], 8, 8, 2)
+        for i in range(2)), jnp.asarray(1.0)))
+
+table = json.load(open(os.environ["REPRO_AUTOTUNE_TABLE"]))
+assert table["version"] == autotune.TABLE_VERSION
+assert len(table["entries"]) == 2, table["entries"].keys()
+for m, n in ((32, 32), (32, 64)):
+    rep = dispatch.dispatch(op_for(m, n), 16, jnp.float32)
+    assert rep.source == "measured", (m, n, rep.source, rep.reason)
+    assert rep.backend == min(rep.est_us, key=rep.est_us.get)
+# corrupt the table: dispatch must fall back to the model, not raise
+with open(os.environ["REPRO_AUTOTUNE_TABLE"], "w") as f:
+    f.write("{corrupt")
+autotune.reload()
+rep = dispatch.dispatch(op_for(32, 32), 16, jnp.float32)
+assert rep.source == "model", rep.source
+# stale version: same fallback
+json.dump({"version": autotune.TABLE_VERSION + 1, "entries": {}},
+          open(os.environ["REPRO_AUTOTUNE_TABLE"], "w"))
+autotune.reload()
+rep = dispatch.dispatch(op_for(32, 32), 16, jnp.float32)
+assert rep.source == "model", rep.source
+print("autotune smoke: measured hits + corrupt/stale fallback OK")
+EOF
+then
+    echo "ci: AUTOTUNE SMOKE (dispatch assertions) FAILED"
+    rm -f "$at_table"
+    exit 1
+fi
+rm -f "$at_table"
+echo "ci: autotune smoke leg OK"
 exit "$status"

@@ -1,5 +1,7 @@
 # The unified operator layer: one operator object (FaustOp), one
-# factorization front door (factorize), cost-model backend dispatch.
+# factorization front door (factorize), cost-model backend dispatch
+# (with the measured autotune layer on top — repro.api.autotune).
+from repro.api import autotune
 from repro.api.dispatch import (
     DispatchReport,
     choose_backend,
@@ -20,6 +22,7 @@ from repro.api.operator import (
 
 __all__ = [
     "DispatchReport",
+    "autotune",
     "FactorizeInfo",
     "FactorizeSpec",
     "FaustOp",

@@ -47,6 +47,14 @@ not of where the benchmark happened to run — unless the operator has
 opted in to host-measured constants via
 ``scripts/calibrate_roofline.py`` (the report's ``roofline`` field names
 the source either way).
+
+Above the model sits the **measured autotuner**
+(:mod:`repro.api.autotune`): where a real timing exists in the autotune
+table, an ``auto`` dispatch stops trusting the closed form — the
+decision is the measured-fastest feasible backend, the report's
+``source`` is ``"measured"`` and ``est_us`` hold real µs.
+``REPRO_AUTOTUNE=off`` disables the table entirely, reproducing pure
+model-priced decisions bit-for-bit (what CI pins).
 """
 from __future__ import annotations
 
@@ -55,33 +63,24 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.launch.roofline import (
-    HBM_BW,
-    LINK_BW,
-    PEAK_FLOPS,
-    ROOFLINE_SOURCE,
-    T_LAUNCH_US,
-)
+from repro.kernels.chain import DEFAULT_BT
+from repro.launch.roofline import roofline_constants
 
-# Fixed per-launch overhead (µs).  Breaks roofline ties in favor of
-# fewer launches — the structural argument for the fused chain at small
-# batch, where all paths are far from both roofs.  Measured on the host
-# when a calibration cache exists (see launch/roofline.py).
-LAUNCH_US = T_LAUNCH_US
-
-# The wgrad kernel's batch-tile size (kernels/chain_bwd.py runs at the
-# chain kernels' default bt; FaustOp.apply's bt= is not plumbed into the
-# cost query, so pricing assumes the default).
-_WGRAD_BT = 128
+# Stable preference on est_us ties: fewest-launch structured path first
+# (single-device fused before sharded — a tie means the mesh buys nothing).
+_ORDER = {"fused": 0, "fused_sharded": 1, "bsr": 2, "dense": 3}
 
 
-def _wgrad_spill_bytes(b: int, s_tot: float) -> float:
+def _wgrad_spill_bytes(b: int, s_tot: float, bt: int = DEFAULT_BT) -> float:
     """HBM bytes of the wgrad kernel's f32 partial-dvalues slabs: batches
     wider than one tile store (and re-read for the sum) one ``s_tot`` f32
     slab per *extra* tile — single-tile batches write dvalues exactly
-    once, already counted in the weight-stream term.  Shared by the
-    single-device and per-shard grad pricings."""
-    return 8.0 * s_tot * (max(-(-b // _WGRAD_BT), 1) - 1)
+    once, already counted in the weight-stream term.  ``bt`` is the batch
+    tile the wgrad kernel will actually run at (caller-forced or
+    autotuned; ``kernels/chain_bwd.py`` default otherwise) — smaller
+    tiles mean more spill slabs, so the grad pricing must see the real
+    one.  Shared by the single-device and per-shard grad pricings."""
+    return 8.0 * s_tot * (max(-(-b // max(bt, 1)), 1) - 1)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,8 +103,16 @@ class DispatchReport:
     # training-aware pricing: True ⇔ est_us are joint forward+backward costs
     grad: bool = False
     # which roofline constants priced this decision ("builtin" or the
-    # calibration cache path — see launch/roofline.py)
-    roofline: str = ROOFLINE_SOURCE
+    # calibration cache path — see launch/roofline.py; read live via
+    # roofline_constants(), so a mid-process calibration shows up here)
+    roofline: str = "builtin"
+    # where est_us came from: "model" (analytic roofline) or "measured"
+    # (autotune table hit — est_us are then real host µs and `backend` is
+    # the measured-fastest feasible path; see repro.api.autotune)
+    source: str = "model"
+    # the chain kernels' batch tile this decision priced/selected
+    # (caller-forced > autotuned winner > DEFAULT_BT)
+    bt: int = DEFAULT_BT
 
     def as_row(self) -> dict:
         """Flat JSON-ready form for benchmark rows."""
@@ -121,6 +128,8 @@ class DispatchReport:
             "reason": self.reason,
             "grad": self.grad,
             "roofline": self.roofline,
+            "source": self.source,
+            "bt": self.bt,
         }
         if self.mesh_shape is not None:
             row["mesh_shape"] = {a: s for a, s in self.mesh_shape}
@@ -155,6 +164,7 @@ def choose_backend(
     requested: str = "auto",
     shard: dict | None = None,
     grad: bool = False,
+    bt: int = DEFAULT_BT,
 ) -> DispatchReport:
     """Pick the cheapest feasible backend under the roofline model.
 
@@ -164,8 +174,19 @@ def choose_backend(
     :meth:`repro.kernels.chain_sharded.ShardPlan.summary` of the operator's
     mesh plan — when given, ``fused_sharded`` joins the priced backends
     with per-shard roofline terms plus the ICI collective term.
-    ``grad=True`` prices forward+backward jointly (see module docstring).
+    ``grad=True`` prices forward+backward jointly (see module docstring);
+    ``bt`` is the chain kernels' batch tile the apply will run at — it
+    prices the wgrad partial-dvalues spill, so a caller-forced (or
+    autotuned) tile changes the grad estimates.
+
+    Roofline constants are read through the live accessor
+    (:func:`repro.launch.roofline.roofline_constants`) — a calibration
+    written after import, or a ``REPRO_ROOFLINE`` flip, reprices the very
+    next decision and ``DispatchReport.roofline`` names the real source.
     """
+    consts, roofline_src = roofline_constants()
+    peak_flops, hbm_bw = consts["peak_flops"], consts["hbm_bw"]
+    link_bw, launch_us = consts["link_bw"], consts["t_launch_us"]
     m, n = shape
     b = batch
     elt = jnp.dtype(dtype).itemsize
@@ -174,9 +195,9 @@ def choose_backend(
         flops: float, byts: float, launches: int, coll_bytes: float = 0.0
     ) -> float:
         return (
-            (max(flops / PEAK_FLOPS, byts / HBM_BW) + coll_bytes / LINK_BW)
+            (max(flops / peak_flops, byts / hbm_bw) + coll_bytes / link_bw)
             * 1e6
-            + launches * LAUNCH_US
+            + launches * launch_us
         )
 
     edge = b * (m + n)
@@ -214,7 +235,7 @@ def choose_backend(
         #     flop passes), with *zero* activation traffic; batches wider
         #     than one tile pay the partial-dvalues spill
         #     (:func:`_wgrad_spill_bytes`).
-        wgrad_spill = _wgrad_spill_bytes(b, s_tot)
+        wgrad_spill = _wgrad_spill_bytes(b, s_tot, bt)
         est = {
             "dense": roofline_us(
                 3 * 2.0 * b * m * n + 3.0 * build_flops,
@@ -235,16 +256,13 @@ def choose_backend(
     coll_bytes = 0
     if shard is not None and "fused_sharded" in feasible:
         est["fused_sharded"], coll_bytes = _sharded_est(
-            roofline_us, b, m, n, s_tot, elt, shard, inner_dims, grad
+            roofline_us, b, m, n, s_tot, elt, shard, inner_dims, grad, bt
         )
     est = {k: v for k, v in est.items() if k in feasible}
-    # stable preference on ties: fewest-launch structured path first
-    # (single-device fused before sharded — a tie means the mesh buys nothing)
-    order = {"fused": 0, "fused_sharded": 1, "bsr": 2, "dense": 3}
-    backend = min(est, key=lambda k: (est[k], order[k]))
+    backend = min(est, key=lambda k: (est[k], _ORDER[k]))
     runner_up = min(
         (k for k in est if k != backend),
-        key=lambda k: (est[k], order[k]),
+        key=lambda k: (est[k], _ORDER[k]),
         default=None,
     )
     if runner_up is None:
@@ -276,6 +294,8 @@ def choose_backend(
         mesh_shape=shard.get("mesh_shape") if shard is not None else None,
         collective_bytes=coll_bytes,
         grad=grad,
+        roofline=roofline_src,
+        bt=bt,
     )
 
 
@@ -283,6 +303,7 @@ def _sharded_est(
     roofline_us, b: int, m: int, n: int, s_tot: int, elt: int, shard: dict,
     inner_dims: tuple[int, ...] = (),
     grad: bool = False,
+    bt: int = DEFAULT_BT,
 ) -> tuple[float, int]:
     """Model the sharded fused apply: per-shard roofline + ICI collectives.
 
@@ -340,7 +361,7 @@ def _sharded_est(
         else:
             s_loc = s_tot / n_model if shard.get("mode") == "model" else s_tot
             flops = 5.0 * flops  # fwd + dgrad + wgrad's recompute/walk/emit
-            byts = 4.0 * byts + _wgrad_spill_bytes(b_loc, s_loc)
+            byts = 4.0 * byts + _wgrad_spill_bytes(b_loc, s_loc, bt)
         launches = 3 * launches
         coll_est = 3 * coll_bytes
     else:
@@ -350,7 +371,7 @@ def _sharded_est(
 
 def dispatch(
     op, batch: int, dtype, requested: str = "auto", shard: dict | None = None,
-    grad: bool = False,
+    grad: bool = False, bt: int | None = None,
 ) -> DispatchReport:
     """Decide (or record) the backend for one *leaf* operator.
 
@@ -360,10 +381,39 @@ def dispatch(
     the forced one.  ``shard`` is the operator's
     :meth:`~repro.kernels.chain_sharded.ShardPlan.summary` when it carries
     a ShardSpec; ``grad=True`` prices forward+backward jointly (set by
-    ``FaustOp.apply`` when it detects an AD trace).  Composite operators
-    dispatch per leaf during ``apply``; :func:`last_report` returns the
-    latest decision either way.
+    ``FaustOp.apply`` when it detects an AD trace).  ``bt`` is the
+    caller-forced chain batch tile, or None to let the decision pick
+    (autotuned winner on a table hit, ``DEFAULT_BT`` otherwise) — the
+    resolved tile comes back on ``DispatchReport.bt`` and
+    ``FaustOp.apply`` runs the chain kernels at it.
+
+    Autotune (``repro.api.autotune``): unless ``REPRO_AUTOTUNE=off``, an
+    ``auto`` request first consults the measured-timings table.  On a hit
+    the decision is the measured-fastest backend *among this leaf's
+    feasible set*, ``est_us`` are the real host µs, and ``source`` flips
+    to ``"measured"`` — model and measured numbers are never mixed in one
+    comparison.  Misses (and every forced request) price with the model
+    exactly as before.  Composite operators dispatch per leaf during
+    ``apply``; :func:`last_report` returns the latest decision either way.
     """
+    from repro.api import autotune as _autotune
+
+    entry = None
+    if requested == "auto" and _autotune.autotune_mode() != "off":
+        key = _autotune.key_of(
+            shape=op.shape,
+            n_factors=op.n_factors,
+            s_tot=op.s_tot,
+            batch=batch,
+            dtype=jnp.dtype(dtype).name,
+            grad=grad,
+            mesh_shape=shard.get("mesh_shape") if shard is not None else None,
+            device=jax.default_backend(),
+        )
+        entry = _autotune.lookup(key)
+    eff_bt = bt if bt is not None else (
+        int(entry["bt"]) if entry is not None and entry.get("bt") else DEFAULT_BT
+    )
     report = choose_backend(
         batch=batch,
         shape=op.shape,
@@ -375,7 +425,36 @@ def dispatch(
         requested=requested,
         shard=shard,
         grad=grad,
+        bt=eff_bt,
     )
+    if entry is not None:
+        measured = {
+            k: float(v)
+            for k, v in entry["us"].items()
+            if k in report.feasible and isinstance(v, (int, float))
+        }
+        if measured:
+            backend = min(measured, key=lambda k: (measured[k], _ORDER.get(k, 9)))
+            runner = min(
+                (k for k in measured if k != backend),
+                key=lambda k: (measured[k], _ORDER.get(k, 9)),
+                default=None,
+            )
+            vs = (
+                f" vs {runner} {measured[runner]:.2f}us" if runner else ""
+            )
+            report = dataclasses.replace(
+                report,
+                backend=backend,
+                est_us=measured,
+                feasible=tuple(measured),
+                source="measured",
+                reason=(
+                    f"measured table hit: {backend} "
+                    f"{measured[backend]:.2f}us{vs} "
+                    f"(model would pick {report.backend})"
+                ),
+            )
     if requested != "auto":
         report = dataclasses.replace(
             report,

@@ -403,9 +403,10 @@ class FaustOp:
         backend: str = "auto",
         *,
         use_kernel: bool | None = None,
-        bt: int = 128,
+        bt: int | None = None,
         interpret: bool | None = None,
         grad: bool | None = None,
+        autotune: bool | None = None,
     ) -> Array:
         """``y = x @ todense()`` for ``x (..., shape[0])`` — the paper's
         O(s_tot) multiplication, on the backend of your choice:
@@ -436,6 +437,15 @@ class FaustOp:
         ``True``/``False`` to override (``grad(jit(f))`` hides the AD
         trace from detection — see :func:`_under_ad` — so pass
         ``grad=True`` there).
+
+        ``bt=None`` lets dispatch choose the chain kernels' batch tile
+        (the autotuned winner on a table hit, the kernels' default
+        otherwise); an explicit ``bt`` always wins.  ``autotune=None``
+        follows ``REPRO_AUTOTUNE`` (``1`` ⇒ measure unseen keys on
+        eager applies); ``autotune=True`` forces measurement for this
+        apply, ``False`` suppresses it — either way existing table hits
+        still steer ``backend="auto"`` unless ``REPRO_AUTOTUNE=off``
+        (see :mod:`repro.api.autotune`).
         """
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}; got {backend!r}")
@@ -445,38 +455,48 @@ class FaustOp:
             interpret = jax.default_backend() != "tpu"
         if grad is None:
             grad = _under_ad(x, self)  # FaustOp is a pytree: covers all leaves
+        if autotune is None:
+            from repro.api import autotune as _at
+
+            autotune = _at.autotune_mode() == "measure"
         if x.shape[-1] != self.shape[0]:
             raise ValueError(
                 f"apply expects x (..., {self.shape[0]}); got {x.shape}"
             )
-        return self._apply(x, backend, use_kernel, bt, interpret, grad)
+        return self._apply(x, backend, use_kernel, bt, interpret, grad, autotune)
 
-    def _apply(self, x, backend, use_kernel, bt, interpret, grad=False) -> Array:
+    def _apply(
+        self, x, backend, use_kernel, bt, interpret, grad=False, autotune=False
+    ) -> Array:
         if self.kind == "leaf":
-            return self._leaf_apply(x, backend, use_kernel, bt, interpret, grad)
+            return self._leaf_apply(
+                x, backend, use_kernel, bt, interpret, grad, autotune
+            )
         if self.kind == "compose":
             y = x
             for c in self.children:
-                y = c._apply(y, backend, use_kernel, bt, interpret, grad)
+                y = c._apply(y, backend, use_kernel, bt, interpret, grad, autotune)
             return y
         ms = [c.shape[0] for c in self.children]
         if self.kind == "hstack":
             return jnp.concatenate(
-                [c._apply(x, backend, use_kernel, bt, interpret, grad)
+                [c._apply(x, backend, use_kernel, bt, interpret, grad, autotune)
                  for c in self.children],
                 axis=-1,
             )
         splits = np.cumsum(ms[:-1]).tolist()
         parts = jnp.split(x, splits, axis=-1)
         ys = [
-            c._apply(p, backend, use_kernel, bt, interpret, grad)
+            c._apply(p, backend, use_kernel, bt, interpret, grad, autotune)
             for c, p in zip(self.children, parts)
         ]
         if self.kind == "vstack":
             return sum(ys[1:], ys[0])
         return jnp.concatenate(ys, axis=-1)  # block_diag
 
-    def _leaf_apply(self, x, backend, use_kernel, bt, interpret, grad=False) -> Array:
+    def _leaf_apply(
+        self, x, backend, use_kernel, bt, interpret, grad=False, autotune=False
+    ) -> Array:
         from repro.api import dispatch as _dispatch
         from repro.kernels.ops import (
             blockfaust_apply,
@@ -507,12 +527,28 @@ class FaustOp:
                 bf_sharded, self.shard.mesh,
                 self.shard.data_axis, self.shard.model_axis,
             )
+        shard_summary = shard_plan.summary() if shard_plan is not None else None
+        if autotune and backend == "auto":
+            # Measure-and-persist this key before deciding, so the very
+            # dispatch below can hit the fresh entry.  No-op inside a
+            # trace or re-entrantly from a measurement apply.
+            from repro.api import autotune as _at
+
+            _at.ensure_measured(
+                self, x,
+                batch=batch_of(x), dtype=x.dtype, grad=grad,
+                mesh_shape=(
+                    shard_summary.get("mesh_shape") if shard_summary else None
+                ),
+                use_kernel=use_kernel, interpret=interpret,
+            )
         # auto and forced decisions both land on dispatch.last_report()
-        backend = _dispatch.dispatch(
+        report = _dispatch.dispatch(
             self, batch_of(x), x.dtype, requested=backend,
-            shard=shard_plan.summary() if shard_plan is not None else None,
-            grad=grad,
-        ).backend
+            shard=shard_summary, grad=grad, bt=bt,
+        )
+        backend = report.backend
+        bt = report.bt  # caller-forced > autotuned winner > DEFAULT_BT
         if backend == "fused_sharded":
             from repro.kernels import chain_sharded as _cs
 

@@ -67,6 +67,14 @@ Array = jax.Array
 #              path's slice-then-pad)
 META_COLS = 7
 
+# Default batch-tile rows per kernel invocation.  Single-sourced here so
+# the apply wrappers, the dispatch wgrad-spill pricing and the autotuner's
+# tile sweep (``repro.api.autotune``) all agree on what "default" means;
+# the autotuner may persist a different winner per shape and
+# ``FaustOp.apply`` then runs the chain kernels at the tuned tile unless
+# the caller forces ``bt=``.
+DEFAULT_BT = 128
+
 
 def _chain_kernel(meta_ref, x_ref, v_ref, o_ref, act_ref, acc_ref, *, n_in0, blk):
     s = pl.program_id(1)
@@ -110,7 +118,7 @@ def chain_matmul(
     meta: Array,
     *,
     plan: ChainPlan,
-    bt: int = 128,
+    bt: int = DEFAULT_BT,
     interpret: bool = False,
 ) -> Array:
     """Fused ``y = x @ F_1 @ ... @ F_J`` in a single ``pallas_call``.

@@ -56,6 +56,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.compress import ChainPlan
 from repro.kernels import ref as _ref
+from repro.kernels.chain import DEFAULT_BT
 
 Array = jax.Array
 
@@ -274,7 +275,7 @@ def chain_dgrad(
     in_idx: Array,
     *,
     plan: ChainPlan,
-    bt: int = 128,
+    bt: int = DEFAULT_BT,
     interpret: bool = False,
 ) -> Array:
     """Fused ``dx = dy @ F_Jᵀ @ ... @ F_1ᵀ`` in a single ``pallas_call``.
@@ -404,7 +405,7 @@ def chain_wgrad(
     in_idx: Array,
     *,
     plan: ChainPlan,
-    bt: int = 128,
+    bt: int = DEFAULT_BT,
     interpret: bool = False,
 ) -> Array:
     """Fused per-slot weight cotangent ``dvalues (S, blk, blk)`` in a single

@@ -21,9 +21,15 @@ Peak constants: builtin TPU-v5e numbers by default, replaced by
 *measured* values when ``scripts/calibrate_roofline.py`` has cached a
 ``roofline.json`` for this host (``~/.cache/repro/roofline.json``;
 ``REPRO_ROOFLINE`` overrides the path, ``REPRO_ROOFLINE=builtin`` forces
-the defaults).  :data:`ROOFLINE_SOURCE` records which was loaded — the
-dispatch layer stamps it on every :class:`~repro.api.dispatch.DispatchReport`
-so benchmark rows say what roofline priced them.
+the defaults).  Live consumers (the dispatch cost model, the autotuner)
+go through :func:`roofline_constants`, which re-reads the cache whenever
+the configured path or its mtime changes — so a calibration written
+mid-process, or a ``REPRO_ROOFLINE`` flip after first import, takes
+effect on the next decision instead of being silently ignored.
+:func:`reload` forces a re-read.  The module-level ``PEAK_FLOPS`` /
+``HBM_BW`` / ``LINK_BW`` / ``T_LAUNCH_US`` / :data:`ROOFLINE_SOURCE`
+are import-time snapshots kept for static consumers (``launch/report``);
+anything that must see post-import calibrations uses the accessor.
 """
 from __future__ import annotations
 
@@ -74,6 +80,42 @@ def load_roofline() -> tuple[dict, str]:
         return {**_BUILTIN, **measured}, f"measured:{path}"
     except (OSError, ValueError):
         return dict(_BUILTIN), "builtin"
+
+
+# Live-state cache for :func:`roofline_constants`: (path, mtime_ns) of the
+# last load, so both a REPRO_ROOFLINE flip and an in-place calibration
+# rewrite invalidate it without an explicit reload() call.
+_STATE: dict = {"stamp": None, "values": None, "source": None}
+
+
+def _cache_stamp() -> tuple:
+    path = roofline_cache_path()
+    if path.lower() in ("", "0", "builtin", "off"):
+        return (path, None)
+    try:
+        return (path, os.stat(path).st_mtime_ns)
+    except OSError:
+        return (path, None)
+
+
+def roofline_constants() -> tuple[dict, str]:
+    """Reloadable accessor: (constants dict, source), re-read whenever the
+    configured cache path or the file behind it changes.  This is what the
+    dispatch cost model prices with — a calibration written by
+    ``scripts/calibrate_roofline.py`` in this same process is picked up on
+    the next decision, and ``DispatchReport.roofline`` names the source
+    that actually priced it."""
+    stamp = _cache_stamp()
+    if _STATE["stamp"] != stamp:
+        _STATE["values"], _STATE["source"] = load_roofline()
+        _STATE["stamp"] = stamp
+    return dict(_STATE["values"]), _STATE["source"]
+
+
+def reload() -> tuple[dict, str]:
+    """Drop the cached constants and re-read the calibration file now."""
+    _STATE["stamp"] = None
+    return roofline_constants()
 
 
 _VALUES, ROOFLINE_SOURCE = load_roofline()

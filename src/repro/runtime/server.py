@@ -70,7 +70,20 @@ class Server:
         self.decode_fn = jax.jit(_decode, donate_argnums=2)
 
     def _sample(self, logits: Array) -> Array:
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # greedy
+        """Greedy next-token pick from one step's full logits.
+
+        ``logits`` is ``(B, S, V)`` single-codebook or ``(B, S, K, V)``
+        multi-codebook (``models/lm._logits`` stacks codebooks on the
+        axis *before* vocab) — the sequence axis is axis 1 in both
+        layouts, and both prefill and decode_step emit S == 1.  The last
+        position is sliced *here*, once and explicitly; the call sites
+        used to carry ``x if cond else x`` conditionals whose branches
+        were identical, which only worked because the two layouts happen
+        to share the seq axis.  Returns decode_step-shaped tokens:
+        ``(B, K, 1)`` multi-codebook, ``(B, 1)`` otherwise.
+        """
+        step = logits[:, -1]  # (B, V) or (B, K, V)
+        tok = jnp.argmax(step, axis=-1).astype(jnp.int32)  # greedy
         if self.cfg.n_codebooks > 1:
             return tok.reshape(tok.shape[0], self.cfg.n_codebooks, 1)
         return tok.reshape(-1, 1)
@@ -90,12 +103,12 @@ class Server:
         stats.prefill_s = time.monotonic() - t0
 
         outs = []
-        tok = self._sample(logits[:, -1] if logits.ndim == 3 else logits[:, -1])
+        tok = self._sample(logits)
         outs.append(np.asarray(tok))
         t0 = time.monotonic()
         for _ in range(n_new_tokens - 1):
             logits, caches = self.decode_fn(self.params, tok, caches)
-            tok = self._sample(logits[:, 0] if cfg.n_codebooks == 1 else logits[:, 0])
+            tok = self._sample(logits)
             outs.append(np.asarray(tok))
         jax.block_until_ready(tok)
         stats.decode_s = time.monotonic() - t0

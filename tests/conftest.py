@@ -15,6 +15,10 @@ unconditionally, before any ``repro`` import.
 import os
 
 os.environ["REPRO_ROOFLINE"] = "builtin"
+# Same story for the measured autotune layer (repro.api.autotune): any
+# table this host has built must not steer backend="auto" assertions.
+# Autotune tests opt back in per-test with monkeypatch.
+os.environ["REPRO_AUTOTUNE"] = "off"
 
 import pytest
 

@@ -1,0 +1,108 @@
+"""Tests for the perf-regression gate (scripts/check_bench.py).
+
+Covers row loading (missing ``us_per_call``, accuracy-only zero rows,
+duplicate names), the ``--min-us`` informational floor, and both exit
+paths of the gate itself, with small fixture JSONs — the script is pure
+stdlib, so these run without jax.
+"""
+import importlib.util
+import json
+import os
+import sys
+
+import pytest
+
+_SPEC = importlib.util.spec_from_file_location(
+    "check_bench",
+    os.path.join(os.path.dirname(__file__), "..", "scripts", "check_bench.py"),
+)
+check_bench = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(check_bench)
+
+
+def _write(tmp_path, name, rows):
+    path = tmp_path / name
+    path.write_text(json.dumps(rows))
+    return str(path)
+
+
+def test_load_rows_filters_and_dedups(tmp_path):
+    path = _write(tmp_path, "rows.json", [
+        {"name": "a", "us_per_call": 10.0},
+        {"name": "accuracy_only"},                    # no us_per_call: dropped
+        {"name": "zero", "us_per_call": 0},           # accuracy row: dropped
+        {"name": "a", "us_per_call": 20.0},           # duplicate: last wins
+        {"name": "b", "us_per_call": "5"},            # numeric string: kept
+    ])
+    rows = check_bench.load_rows(path)
+    assert rows == {"a": 20.0, "b": 5.0}
+
+
+def test_no_comparable_rows_passes(tmp_path, capsys):
+    base = _write(tmp_path, "base.json", [{"name": "x", "us_per_call": 1.0}])
+    new = _write(tmp_path, "new.json", [{"name": "y", "us_per_call": 1.0}])
+    assert check_bench.main([new, "--baseline", base]) == 0
+    assert "no comparable rows" in capsys.readouterr().out
+
+
+def test_regression_fails_and_names_offender(tmp_path, capsys):
+    base = _write(tmp_path, "base.json", [
+        {"name": "slow", "us_per_call": 200_000.0},
+        {"name": "fine", "us_per_call": 150_000.0},
+    ])
+    new = _write(tmp_path, "new.json", [
+        {"name": "slow", "us_per_call": 300_000.0},   # +50% > 25%
+        {"name": "fine", "us_per_call": 160_000.0},   # +6.7%: ok
+    ])
+    rc = check_bench.main([new, "--baseline", base])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "REGRESSED" in out and "'slow'" in out and "FAILED" in out
+
+
+def test_within_threshold_passes(tmp_path, capsys):
+    base = _write(tmp_path, "base.json", [
+        {"name": "row", "us_per_call": 200_000.0},
+    ])
+    new = _write(tmp_path, "new.json", [
+        {"name": "row", "us_per_call": 230_000.0},    # +15% < 25%
+    ])
+    assert check_bench.main([new, "--baseline", base]) == 0
+    assert "check_bench: OK" in capsys.readouterr().out
+
+
+def test_min_us_floor_is_informational_only(tmp_path, capsys):
+    """A huge regression below the --min-us floor is reported but not
+    gated — sub-floor rows are scheduler noise on shared hosts."""
+    base = _write(tmp_path, "base.json", [
+        {"name": "tiny", "us_per_call": 50_000.0},
+    ])
+    new = _write(tmp_path, "new.json", [
+        {"name": "tiny", "us_per_call": 500_000.0},   # 10×, but sub-floor
+    ])
+    rc = check_bench.main([new, "--baseline", base])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "below gate floor" in out
+    assert "0 gated rows" in out and "1 informational" in out
+
+
+def test_min_us_floor_override_gates(tmp_path):
+    """Lowering the floor turns the same row into a hard failure."""
+    base = _write(tmp_path, "base.json", [
+        {"name": "tiny", "us_per_call": 50_000.0},
+    ])
+    new = _write(tmp_path, "new.json", [
+        {"name": "tiny", "us_per_call": 500_000.0},
+    ])
+    assert check_bench.main([new, "--baseline", base, "--min-us", "1000"]) == 1
+
+
+def test_threshold_override(tmp_path):
+    base = _write(tmp_path, "base.json", [
+        {"name": "row", "us_per_call": 200_000.0},
+    ])
+    new = _write(tmp_path, "new.json", [
+        {"name": "row", "us_per_call": 230_000.0},    # +15%
+    ])
+    assert check_bench.main([new, "--baseline", base, "--threshold", "0.1"]) == 1

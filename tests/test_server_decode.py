@@ -1,0 +1,110 @@
+"""Serving-runtime decode regression tests (Server._sample indexing).
+
+The sampler used to be called through ``x if cond else x`` conditionals
+whose two branches were *identical* — the multi-codebook path only
+worked because both logits layouts happen to put the sequence axis at
+axis 1.  ``_sample`` now takes one step's full logits and slices the
+seq axis explicitly; these tests pin the behavior down for
+``n_codebooks > 1`` (musicgen) and the single-codebook default so any
+future axis reshuffle in ``models/lm._logits`` fails loudly here
+instead of silently sampling garbage tokens.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.models import lm
+from repro.runtime.server import Server
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _server_for(arch: str, b: int, s: int, max_len: int, key=0):
+    cfg = get_smoke(arch)
+    params = lm.init_model(jax.random.PRNGKey(key), cfg)
+    if cfg.n_codebooks > 1:
+        toks = jax.random.randint(
+            jax.random.PRNGKey(key + 1), (b, cfg.n_codebooks, s), 0, cfg.vocab
+        )
+    else:
+        toks = jax.random.randint(
+            jax.random.PRNGKey(key + 1), (b, s), 0, cfg.vocab
+        )
+    return cfg, Server(cfg, params, max_len=max_len), {"tokens": toks}
+
+
+def test_sample_multi_codebook_picks_per_codebook_argmax():
+    """(B, S, K, V) logits: each codebook's own argmax, from the *last*
+    seq position, lands in slot (b, k, 0)."""
+    cfg = get_smoke("musicgen_medium")
+    assert cfg.n_codebooks > 1
+    srv = Server.__new__(Server)  # unit-test _sample without a model
+    srv.cfg = cfg
+    b, s, k, v = 2, 3, cfg.n_codebooks, cfg.vocab
+    logits = jnp.full((b, s, k, v), -1.0)
+    want = np.zeros((b, k), dtype=np.int32)
+    for bi in range(b):
+        for ki in range(k):
+            # distractor peak at an *earlier* seq position: must be ignored
+            logits = logits.at[bi, 0, ki, (7 * bi + ki) % v].set(9.0)
+            want[bi, ki] = (3 * bi + 2 * ki + 1) % v
+            logits = logits.at[bi, -1, ki, want[bi, ki]].set(5.0)
+    tok = srv._sample(logits)
+    assert tok.shape == (b, k, 1)
+    assert tok.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(tok)[:, :, 0], want)
+
+
+def test_sample_single_codebook_shape_and_argmax():
+    cfg = get_smoke("gemma_2b")
+    assert cfg.n_codebooks == 1
+    srv = Server.__new__(Server)
+    srv.cfg = cfg
+    b, v = 3, cfg.vocab
+    logits = jnp.full((b, 1, v), -2.0)
+    want = np.array([5, 0, v - 1], dtype=np.int32)
+    for bi in range(b):
+        logits = logits.at[bi, 0, want[bi]].set(4.0)
+    tok = srv._sample(logits)
+    assert tok.shape == (b, 1)
+    np.testing.assert_array_equal(np.asarray(tok)[:, 0], want)
+
+
+def test_generate_multi_codebook_shapes_and_range():
+    """End-to-end musicgen decode: tokens per codebook per step, all in
+    vocab range, decode_step consuming what _sample emits."""
+    b, s, n_new = 2, 8, 4
+    cfg, srv, batch = _server_for("musicgen_medium", b, s, max_len=s + n_new)
+    gen, stats = srv.generate(batch, n_new)
+    assert gen.shape == (b, cfg.n_codebooks, n_new)
+    assert gen.dtype == np.int32
+    assert (gen >= 0).all() and (gen < cfg.vocab).all()
+    assert stats.tokens_decoded == b * (n_new - 1)
+
+
+def test_generate_multi_codebook_matches_stepwise_argmax():
+    """The served tokens equal the greedy argmax of the model's own
+    prefill/decode logits, per codebook — the regression the identical
+    branches were hiding."""
+    b, s, n_new = 2, 6, 3
+    cfg, srv, batch = _server_for("musicgen_medium", b, s, max_len=s + n_new)
+    gen, _ = srv.generate(batch, n_new)
+
+    caches = lm.make_caches(cfg, b, srv.max_len, dtype=jnp.float32)
+    logits, caches = lm.prefill(srv.params, cfg, batch, caches)
+    want = []
+    for _ in range(n_new):
+        step = np.asarray(jnp.argmax(logits[:, -1], axis=-1), dtype=np.int32)
+        want.append(step)  # (B, K)
+        tok = jnp.asarray(step)[:, :, None]
+        logits, caches = lm.decode_step(srv.params, cfg, tok, caches)
+    np.testing.assert_array_equal(gen, np.stack(want, axis=-1))
+
+
+def test_generate_single_codebook_shapes():
+    b, s, n_new = 2, 8, 4
+    cfg, srv, batch = _server_for("gemma_2b", b, s, max_len=s + n_new)
+    gen, _ = srv.generate(batch, n_new)
+    assert gen.shape == (b, n_new)
+    assert (gen >= 0).all() and (gen < cfg.vocab).all()

@@ -27,6 +27,10 @@ tracked across PRs, e.g.::
   shard_scaling       — mesh-sharded vs single-device fused apply
                         (debug mesh via CPU host-device override;
                         EXPERIMENTS.md §Sharded apply)
+  serve_load          — continuous-batching engine under saturated +
+                        Poisson load: per-decode-step time, p50/p99
+                        latency, TTFT, tokens/s, batch occupancy
+                        (EXPERIMENTS.md §Serving engine)
 """
 from __future__ import annotations
 
@@ -76,6 +80,7 @@ def main() -> None:
         denoising,
         hadamard,
         meg_tradeoff,
+        serve_load,
         shard_scaling,
         source_localization,
         svd_comparison,
@@ -91,6 +96,7 @@ def main() -> None:
         "apply_grad": apply_speed.run_grad,
         "batch_compress": batch_compress.run,
         "shard_scaling": shard_scaling.run,
+        "serve_load": serve_load.run,
     }
     names = args.only.split(",") if args.only else list(table)
     print("name,us_per_call,derived")

@@ -65,9 +65,13 @@ fi
 # Multi-device leg: the shard_map/collective paths (tests/test_sharded_apply.py
 # skips itself on a single-device host), run under the CPU host-device-count
 # override so they execute on every push, not just when a TPU is attached.
+# The engine-sim suite rides along: the scheduler traces re-run here with
+# 8 host devices, which unlocks the engine-vs-Server multi-device parity
+# case (autotune stays pinned off via tests/conftest.py either way).
 mdout=$(XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
         PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout "$CI_TIMEOUT" \
-        python -m pytest -q tests/test_sharded_apply.py tests/test_sharding.py 2>&1)
+        python -m pytest -q tests/test_sharded_apply.py tests/test_sharding.py \
+        tests/test_engine_sim.py tests/test_engine_sched.py 2>&1)
 mdstatus=$?
 echo "$mdout" | tail -3
 if [ "$mdstatus" -eq 124 ]; then
@@ -87,7 +91,7 @@ echo "ci: multi-device leg OK"
 if [ "${REPRO_SKIP_BENCH:-0}" != "1" ]; then
     if ! PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} REPRO_ROOFLINE=builtin \
         REPRO_AUTOTUNE=off timeout "$CI_TIMEOUT" \
-        python benchmarks/run.py --only apply_speed,apply_grad \
+        python benchmarks/run.py --only apply_speed,apply_grad,serve_load \
         --json /tmp/repro_bench_ci.json > /dev/null; then
         echo "ci: BENCH LEG FAILED TO RUN"
         exit 1

@@ -371,7 +371,7 @@ def _sharded_est(
 
 def dispatch(
     op, batch: int, dtype, requested: str = "auto", shard: dict | None = None,
-    grad: bool = False, bt: int | None = None,
+    grad: bool = False, bt: int | None = None, record: bool = True,
 ) -> DispatchReport:
     """Decide (or record) the backend for one *leaf* operator.
 
@@ -395,6 +395,12 @@ def dispatch(
     comparison.  Misses (and every forced request) price with the model
     exactly as before.  Composite operators dispatch per leaf during
     ``apply``; :func:`last_report` returns the latest decision either way.
+
+    ``record=False`` makes the call a pure *query*: the report is
+    computed identically but :func:`last_report` is left untouched, so an
+    advisory consult (e.g. the serving engine pricing the live decode
+    batch each step) can't be mistaken for a decision an ``apply``
+    actually staged.
     """
     from repro.api import autotune as _autotune
 
@@ -462,4 +468,4 @@ def dispatch(
             reason=f"forced by caller (cost model would pick "
                    f"{report.backend}: {report.reason})",
         )
-    return _record(report)
+    return _record(report) if record else report

@@ -617,6 +617,42 @@ class FaustOp:
             dims = list(rep.plan.out_feats[:-1])
         return tuple(reversed(dims)) if self.adjoint else tuple(dims)
 
+    def dispatch_for(
+        self, batch: int, dtype=jnp.float32, *, grad: bool = False,
+        bt: int | None = None,
+    ):
+        """Advisory dispatch query: the decision ``apply(backend="auto")``
+        *would* make at a hypothetical ``batch``, without applying
+        anything and without touching :func:`repro.api.dispatch.last_report`
+        (``record=False``).  The serving engine calls this every decode
+        step with the *live* batch size so the chosen backend (and ``bt``
+        tile) follows the batch as it breathes; the same autotune-table /
+        roofline-model machinery prices the answer, so ``source`` tells
+        whether a measurement or the closed form decided.  Composites
+        return the last leaf's report (leaves dispatch independently
+        during a real ``apply``)."""
+        if self.kind != "leaf":
+            rep = None
+            for c in self.children:
+                rep = c.dispatch_for(batch, dtype, grad=grad, bt=bt)
+            return rep
+        from repro.api import dispatch as _dispatch
+
+        shard_summary = None
+        if self.shard is not None and "fused_sharded" in self.feasible_backends():
+            from repro.kernels import chain_sharded as _cs
+
+            rep = _conj_rep(self.rep) if self.conj else self.rep
+            bf = rep if isinstance(rep, BlockFaust) else _cached_unpack(rep)
+            shard_summary = _cs.plan_shard(
+                bf, self.shard.mesh, self.shard.data_axis,
+                self.shard.model_axis,
+            ).summary()
+        return _dispatch.dispatch(
+            self, batch, dtype, requested="auto", shard=shard_summary,
+            grad=grad, bt=bt, record=False,
+        )
+
     @property
     def n_factors(self) -> int:
         if self.kind == "leaf":

@@ -47,7 +47,7 @@ def cache_shardings(cfg: ArchConfig, mesh: Mesh, policy: ShardingPolicy, cell: S
         bax = _fit_axes(policy.batch, b, mesh)
         sax = _fit_axes(policy.kv_seq, cap, mesh)
         kv = NamedSharding(mesh, PartitionSpec(None, bax, None, sax, None))
-        pos = NamedSharding(mesh, PartitionSpec(None))
+        pos = NamedSharding(mesh, PartitionSpec(None, bax))  # (layers, B)
         return KVCache(kv, kv, pos)
 
     def mamba_sharding():
@@ -55,7 +55,7 @@ def cache_shardings(cfg: ArchConfig, mesh: Mesh, policy: ShardingPolicy, cell: S
         hax = _fit_axes("model", cfg.ssm.n_heads, mesh) if cfg.ssm else None
         conv = NamedSharding(mesh, PartitionSpec(None, bax, None, None))
         ssm = NamedSharding(mesh, PartitionSpec(None, bax, hax, None, None))
-        pos = NamedSharding(mesh, PartitionSpec(None))
+        pos = NamedSharding(mesh, PartitionSpec(None, bax))  # (layers, B)
         return MambaCache(conv, ssm, pos)
 
     stages = []

@@ -212,7 +212,10 @@ def decode_attention(
     max/sum reductions lower to partial reductions + all-reduce (SP decode).
     ``kv_positions`` carries the *global* position of every cache row
     (ring-buffer caches pass their unrolled positions); invalid rows are
-    masked out by causality.
+    masked out by causality.  Both position arguments may carry a leading
+    batch dim (``q_position (B,Sq)``, ``kv_positions (B,L)``) — the
+    slot-paged serving pool decodes rows at independent positions — or
+    be batch-free (legacy shared-position decode).
 
     Perf notes (EXPERIMENTS.md §Perf iteration 2): the cache layout is
     (B, KH, L, D) — the dot's native batch-major layout, so no per-step
@@ -230,8 +233,8 @@ def decode_attention(
     qg = qg.reshape(b, kh, g * sq, d).astype(k_cache.dtype)
     s = jnp.einsum("bhqd,bhcd->bhqc", qg, k_cache)  # bf16 dot, no transpose
     s = s.astype(jnp.float32).reshape(b, kh, g, sq, l) * scale
-    bias = _mask_bias(q_position, kv_positions, True, window)  # (Sq,L)
-    s = s + bias
+    bias = _mask_bias(q_position, kv_positions, True, window)  # ([B,]Sq,L)
+    s = s + (bias[:, None, None] if bias.ndim == 3 else bias)
     m = jnp.max(s, axis=-1, keepdims=True)
     p = jnp.exp(s - m)
     p = (p / jnp.sum(p, axis=-1, keepdims=True)).astype(v_cache.dtype)
@@ -250,11 +253,20 @@ def decode_attention(
 class KVCache(NamedTuple):
     """Fixed-capacity cache in dot-native layout (B, KH, capacity, D).
     ``capacity == window`` for sliding layers (ring buffer) or the max
-    sequence length for global layers."""
+    sequence length for global layers.
+
+    ``pos`` is per-row: shape ``(B,)``, the number of tokens each batch
+    row has seen.  The serving engine's slot-paged pool relies on this —
+    every batch row is an independently-positioned cache *slot*, so
+    requests of uneven length share one static-shape cache and decode
+    steps gather/scatter rows by slot index (``models/lm.py``
+    ``gather_cache_slots``/``scatter_cache_slots``).  A scalar ``pos``
+    (legacy all-rows-share semantics) still broadcasts correctly through
+    every function here."""
 
     k: Array  # (B, KH, capacity, D)
     v: Array
-    pos: Array  # scalar int32 — number of tokens seen so far
+    pos: Array  # (B,) int32 — tokens seen per row (scalar = shared)
 
     @property
     def capacity(self) -> int:
@@ -265,31 +277,43 @@ def kv_cache_init(b: int, capacity: int, kh: int, d: int, dtype=jnp.bfloat16) ->
     return KVCache(
         jnp.zeros((b, kh, capacity, d), dtype=dtype),
         jnp.zeros((b, kh, capacity, d), dtype=dtype),
-        jnp.zeros((), jnp.int32),
+        jnp.zeros((b,), jnp.int32),
     )
 
 
 def kv_cache_update_decode(cache: KVCache, k_new: Array, v_new: Array) -> KVCache:
-    """Insert one token (B,1,KH,D) at pos (mod capacity for ring buffers)."""
+    """Insert one token (B,1,KH,D) at each row's pos (mod capacity for
+    ring buffers) — a per-row scatter, since slot positions differ."""
     idx = cache.pos % cache.capacity
     k_t = k_new.astype(cache.k.dtype).transpose(0, 2, 1, 3)  # (B,KH,1,D)
     v_t = v_new.astype(cache.v.dtype).transpose(0, 2, 1, 3)
-    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_t, idx, axis=2)
-    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_t, idx, axis=2)
+    if idx.ndim == 0:  # legacy scalar pos: one dynamic slice for all rows
+        k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_t, idx, axis=2)
+        v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_t, idx, axis=2)
+    else:
+        b = cache.k.shape[0]
+        rows = jnp.arange(b)
+        k = cache.k.at[rows, :, idx].set(k_t[:, :, 0])
+        v = cache.v.at[rows, :, idx].set(v_t[:, :, 0])
     return KVCache(k, v, cache.pos + 1)
 
 
 def kv_cache_positions(cache: KVCache) -> Array:
-    """Global position of each cache row (rows not yet written get a
-    position beyond the current pos so causal masking removes them)."""
+    """Global position of each cache row's entries — ``(B, capacity)``
+    for per-row pos, ``(capacity,)`` for legacy scalar pos.  Entries not
+    yet written get a position beyond the current pos so causal masking
+    removes them (this is also what keeps a reused pool slot's *stale*
+    rows — left over from a freed request — unread: they all sit at
+    indices ≥ the new occupant's pos until overwritten)."""
     cap = cache.capacity
     slots = jnp.arange(cap)
-    n_wraps = cache.pos // cap
+    pos = cache.pos[..., None]  # (B,1); scalar pos → (1,) broadcasts flat
+    n_wraps = pos // cap
     base = slots + (n_wraps - 1) * cap
     latest = slots + n_wraps * cap
-    positions = jnp.where(latest < cache.pos, latest, base)
+    positions = jnp.where(latest < pos, latest, base)
     # rows never written (pos < capacity): base is negative → mark invalid
-    return jnp.where(positions >= 0, positions, cache.pos + 1 + slots)
+    return jnp.where(positions >= 0, positions, pos + 1 + slots)
 
 
 def kv_cache_prefill(cache: KVCache, k_seq: Array, v_seq: Array) -> KVCache:
@@ -297,6 +321,7 @@ def kv_cache_prefill(cache: KVCache, k_seq: Array, v_seq: Array) -> KVCache:
     the last ``capacity`` tokens, laid out so that slot = pos % capacity."""
     s = k_seq.shape[1]
     cap = cache.capacity
+    pos = jnp.full(cache.pos.shape, s, jnp.int32)
     k_t = k_seq.transpose(0, 2, 1, 3)  # (B,KH,S,D)
     v_t = v_seq.transpose(0, 2, 1, 3)
     if s <= cap:
@@ -304,14 +329,14 @@ def kv_cache_prefill(cache: KVCache, k_seq: Array, v_seq: Array) -> KVCache:
             cache.k, k_t.astype(cache.k.dtype), 0, axis=2)
         v = jax.lax.dynamic_update_slice_in_dim(
             cache.v, v_t.astype(cache.v.dtype), 0, axis=2)
-        return KVCache(k, v, jnp.asarray(s, jnp.int32))
+        return KVCache(k, v, pos)
     tail_k = k_t[:, :, s - cap :]
     tail_v = v_t[:, :, s - cap :]
     # token at global position p lives in slot p % cap
     roll = (s - cap) % cap
     k = jnp.roll(tail_k, shift=roll, axis=2).astype(cache.k.dtype)
     v = jnp.roll(tail_v, shift=roll, axis=2).astype(cache.v.dtype)
-    return KVCache(k, v, jnp.asarray(s, jnp.int32))
+    return KVCache(k, v, pos)
 
 
 # ---------------------------------------------------------------------------
@@ -385,10 +410,11 @@ def attn_prefill(p: dict, x: Array, spec: AttnSpec, cache: KVCache, chunk: int =
 
 
 def attn_decode(p: dict, x: Array, spec: AttnSpec, cache: KVCache):
-    """One-token decode step: x (B,1,d)."""
+    """One-token decode step: x (B,1,d).  Per-row cache positions give
+    per-row rope/mask positions — (B,S); legacy scalar pos gives (S,)."""
     b, s, _ = x.shape
     pos = cache.pos
-    positions = pos + jnp.arange(s)
+    positions = pos[..., None] + jnp.arange(s)
     q, k, v = attn_qkv(p, x, spec, positions)
     cache = kv_cache_update_decode(cache, k, v)
     o = decode_attention(

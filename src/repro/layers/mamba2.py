@@ -78,14 +78,14 @@ def mamba2_init(key: jax.Array, spec: Mamba2Spec, dtype=jnp.float32) -> dict:
 class MambaCache(NamedTuple):
     conv: Array  # (B, d_conv-1, conv_dim) — last inputs for causal conv
     ssm: Array  # (B, H, P, N) fp32 recurrent state
-    pos: Array  # scalar int32
+    pos: Array  # (B,) int32 — tokens seen per row (slot-paged serving)
 
 
 def mamba_cache_init(b: int, spec: Mamba2Spec, dtype=jnp.bfloat16) -> MambaCache:
     return MambaCache(
         jnp.zeros((b, spec.d_conv - 1, spec.conv_dim), dtype=dtype),
         jnp.zeros((b, spec.n_heads, spec.headdim, spec.d_state), jnp.float32),
-        jnp.zeros((), jnp.int32),
+        jnp.zeros((b,), jnp.int32),
     )
 
 
@@ -248,7 +248,7 @@ def mamba2_apply(
             new_cache = MambaCache(
                 conv_hist.astype(cache.conv.dtype),
                 final_state,
-                jnp.asarray(s, jnp.int32),
+                jnp.full(cache.pos.shape, s, jnp.int32),
             )
 
     y = rmsnorm(p["norm_w"], y * jax.nn.silu(z))

@@ -190,6 +190,30 @@ def make_caches(cfg: ArchConfig, batch: int, cache_len: int, dtype=jnp.bfloat16)
     return stages
 
 
+# Every cache leaf is stacked over the scan repeat (axis 0), so the batch
+# dim — the serving engine's *slot* dim — is axis 1 uniformly: KVCache.k
+# (repeat, B, KH, cap, D), KVCache.pos (repeat, B), MambaCache.ssm
+# (repeat, B, H, P, N), …  The slot-paged pool (runtime/engine.py) keeps
+# one make_caches(cfg, n_slots, max_len) pytree alive and gathers the
+# live requests' rows into a (repeat, B_live, …) cache per decode step.
+_CACHE_BATCH_AXIS = 1
+
+
+def gather_cache_slots(caches, slot_idx: Array):
+    """Select cache rows ``slot_idx (B,)`` from a slot pool → a live-batch
+    cache pytree with batch size ``len(slot_idx)``."""
+    return jax.tree_util.tree_map(
+        lambda a: jnp.take(a, slot_idx, axis=_CACHE_BATCH_AXIS), caches
+    )
+
+
+def scatter_cache_slots(pool, caches, slot_idx: Array):
+    """Write a live-batch cache pytree back into pool rows ``slot_idx``."""
+    return jax.tree_util.tree_map(
+        lambda p, a: p.at[:, slot_idx].set(a), pool, caches
+    )
+
+
 # ---------------------------------------------------------------------------
 # Forward
 # ---------------------------------------------------------------------------
@@ -293,14 +317,16 @@ def _embed_tokens(params, cfg: ArchConfig, tokens: Array, pos0) -> Array:
         tabs = params["embed"]["table"]  # (K, V, d)
         kidx = jnp.arange(cfg.n_codebooks)[None, :, None]
         x = jnp.sum(tabs[kidx, tokens], axis=1).astype(dt)  # (B,S,d)
-        # sinusoidal positions (musicgen has no rope)
+        # sinusoidal positions (musicgen has no rope); pos0 may be a
+        # per-row (B,) vector — slot-paged decode steps rows at
+        # independent positions — or a scalar (train/prefill from 0)
         s = tokens.shape[-1]
-        pos = pos0 + jnp.arange(s)
+        pos = jnp.asarray(pos0)[..., None] + jnp.arange(s)  # (S,) or (B,S)
         half = cfg.d_model // 2
         freq = jnp.exp(-np.log(10000.0) * jnp.arange(half) / half)
-        ang = pos[:, None] * freq[None, :]
+        ang = pos[..., :, None] * freq  # (..., S, half)
         pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
-        x = x + pe[None].astype(dt)
+        x = x + (pe if pe.ndim == 3 else pe[None]).astype(dt)
         return x
     x = params["embed"]["table"][tokens].astype(dt)
     if cfg.scale_embed:
@@ -385,7 +411,7 @@ def decode_step(params, cfg: ArchConfig, tokens: Array, caches):
 
 def _first_cache_pos(caches) -> Array:
     first = caches[0][0]
-    return first.pos[0]  # stacked over repeat
+    return first.pos[0]  # stacked over repeat → per-row (B,)
 
 
 def greedy_token(logits: Array) -> Array:

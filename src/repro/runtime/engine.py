@@ -1,0 +1,568 @@
+"""Continuous-batching FAµST serving engine.
+
+The paper's premise is that multi-layer sparse factorizations make
+*applying* an operator cheap — and serving is where apply cost dominates:
+many concurrent streams of uneven length, decoded one token at a time.
+``runtime/server.py``'s single-batch prefill/decode loop forces every
+stream in a batch to share one admission time and one token budget; this
+module replaces it with a proper engine:
+
+* :class:`Request` — one stream: its own prompt length, token budget and
+  arrival time.
+* :class:`SlotAllocator` — a fixed pool of KV-cache *slots* (rows of one
+  ``lm.make_caches(cfg, n_slots, max_len)`` pytree).  Deterministic
+  lowest-free-slot assignment on admit, returned on finish — the
+  allocation schedule is a pure function of the arrival/finish sequence,
+  which the simulation tests rely on.
+* :class:`Engine` — the scheduler.  Each :meth:`Engine.step` admits
+  queued requests while slots are free (per-request prefill written into
+  the slot's pool row), then runs **one** decode step over the live
+  batch.  Requests that hit their budget complete and free their slot
+  immediately — the batch *breathes*, which is exactly the small-batch
+  regime where the fused chain kernel wins (BENCH ``apply_*`` rows).
+* :class:`EngineStats` — queue depth and batch-occupancy per step,
+  admitted/completed/evicted counts, per-request TTFT/TPOT, and the
+  per-step FAµST dispatch decision.
+
+**Static shapes.** ``lm.prefill`` / ``lm.decode_step`` never see a
+dynamic shape: the cache pool keeps the slot dim at ``n_slots``; a decode
+step gathers the live slots' rows (``lm.gather_cache_slots``) into a
+``(repeat, B_live, …)`` cache, steps it, and scatters the rows back.
+Per-slot position tracking (``KVCache.pos``/``MambaCache.pos`` are per
+row) replaces left-padding: a reused slot simply restarts its row's
+positions, and stale entries beyond the new occupant's ``pos`` are
+masked by the ring-attention window math.  jit recompiles only per
+distinct live batch size / prompt length, not per slot or schedule.
+
+**Live-batch dispatch.** Each decode step consults the dispatch layer at
+the *live* batch size (:meth:`repro.api.FaustOp.dispatch_for`,
+``record=False``) so the backend choice — and the autotuned ``bt`` tile —
+follows the batch as it breathes; the per-step
+:class:`~repro.api.dispatch.DispatchReport` (including its autotune
+``source``) is recorded on :class:`EngineStats`.
+
+**Eviction.** ``Engine.evict(rid)`` preempts a live request: its slot is
+freed (and may be reused immediately), the request returns to the *front*
+of the queue, and re-admission prefills ``prompt + generated`` — greedy
+decode recomputes the same stream token-exactly, so preemption is
+invisible in the output (pinned by tests/test_engine_sim.py).
+
+The model side lives behind the small :class:`Executor` interface so the
+scheduler itself is testable with a pure-numpy deterministic model
+(``tests/engine_sim.py``) — zero jax, zero wall-clock.
+:class:`LMExecutor` is the real jax implementation;
+``runtime/server.py``'s ``Server.generate`` is now a thin shim over
+``Engine`` + ``LMExecutor``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import time
+from collections import OrderedDict, deque
+from typing import Any, Callable, Protocol, Sequence
+
+import numpy as np
+
+__all__ = [
+    "Request",
+    "SlotAllocator",
+    "EngineStats",
+    "Executor",
+    "LMExecutor",
+    "Engine",
+]
+
+
+# ---------------------------------------------------------------------------
+# Requests
+# ---------------------------------------------------------------------------
+
+
+QUEUED, RUNNING, DONE = "queued", "running", "done"
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation stream.
+
+    ``prompt`` is a single row — ``(S,)`` int32, or ``(K, S)`` for
+    multi-codebook archs.  ``extras`` carries per-request side inputs
+    (e.g. a ``vision_embeds`` row for VLM archs), batched up by the
+    executor.  Runtime fields are engine-owned.
+    """
+
+    rid: str
+    prompt: np.ndarray
+    max_new_tokens: int
+    extras: dict = dataclasses.field(default_factory=dict)
+    arrival: float = 0.0
+    # --- engine-owned runtime state ---
+    state: str = QUEUED
+    slot: int | None = None
+    generated: list = dataclasses.field(default_factory=list)
+    last_token: np.ndarray | None = None
+    first_token_t: float | None = None
+    done_t: float | None = None
+    n_evictions: int = 0
+
+    def prompt_full(self) -> np.ndarray:
+        """Prompt plus everything generated so far — what a re-admission
+        prefills, so greedy decode resumes the stream token-exactly."""
+        if not self.generated:
+            return self.prompt
+        gen = np.concatenate(self.generated, axis=-1).astype(self.prompt.dtype)
+        return np.concatenate([self.prompt, gen], axis=-1)
+
+    def output(self) -> np.ndarray:
+        """Generated tokens: ``(n,)`` or ``(K, n)`` multi-codebook."""
+        if not self.generated:
+            k = self.prompt.shape[0] if self.prompt.ndim == 2 else None
+            return np.zeros((k, 0) if k else (0,), np.int32)
+        return np.concatenate(self.generated, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Slot allocator
+# ---------------------------------------------------------------------------
+
+
+class SlotAllocator:
+    """Fixed pool of cache slots with deterministic assignment.
+
+    ``alloc`` always hands out the lowest free slot index (a min-heap),
+    so the slot schedule is a pure function of the admission/finish
+    sequence — the property the simulation tests pin.  Double-alloc and
+    double-free are hard errors, not corruptions.
+    """
+
+    def __init__(self, n_slots: int):
+        if n_slots <= 0:
+            raise ValueError(f"n_slots must be positive; got {n_slots}")
+        self.n_slots = n_slots
+        self._free: list[int] = list(range(n_slots))  # already a valid heap
+        self._owner: dict[int, str] = {}
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def owner_of(self, slot: int) -> str | None:
+        return self._owner.get(slot)
+
+    def alloc(self, rid: str) -> int:
+        if not self._free:
+            raise RuntimeError("slot pool exhausted")
+        slot = heapq.heappop(self._free)
+        assert slot not in self._owner, f"slot {slot} double-assigned"
+        self._owner[slot] = rid
+        return slot
+
+    def free(self, slot: int) -> None:
+        if slot not in self._owner:
+            raise ValueError(f"slot {slot} is not allocated (double free?)")
+        del self._owner[slot]
+        heapq.heappush(self._free, slot)
+
+
+# ---------------------------------------------------------------------------
+# Stats
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Scheduler-level accounting.
+
+    ``tokens_decoded`` counts **every** sampled token, including the one
+    sampled from the prefill logits — the accounting fix over the old
+    ``ServeStats`` (which counted ``b·(n_new−1)``, excluding the
+    prefill-sampled token from both the count and ``decode_s``).  The
+    decode timer here starts after the prefill forward and *before* the
+    first sample, so ``tokens_per_s = tokens_decoded / decode_s`` is
+    consistent: every counted token's sampling time is inside
+    ``decode_s``.
+    """
+
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    tokens_decoded: int = 0
+    steps: int = 0  # decode steps executed (batch of any size counts 1)
+    admitted: int = 0  # prefills run (re-admissions count again)
+    completed: int = 0
+    evicted: int = 0
+    # per-decode-step observability
+    queue_depth: list = dataclasses.field(default_factory=list)
+    occupancy: dict = dataclasses.field(default_factory=dict)  # B_live -> steps
+    dispatch_per_step: list = dataclasses.field(default_factory=list)
+    # per-request latency (seconds, under the engine's clock)
+    ttft_s: dict = dataclasses.field(default_factory=dict)
+    tpot_s: dict = dataclasses.field(default_factory=dict)
+    # parity with the old ServeStats surface
+    faust_dispatch: Any = None  # last decision *staged* into a computation
+    mesh_axes: dict | None = None
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens_decoded / self.decode_s if self.decode_s else 0.0
+
+    def backend_counts(self) -> dict:
+        """Histogram of per-step dispatch decisions: backend -> steps."""
+        counts: dict[str, int] = {}
+        for rep in self.dispatch_per_step:
+            if rep is not None:
+                counts[rep.backend] = counts.get(rep.backend, 0) + 1
+        return counts
+
+
+# ---------------------------------------------------------------------------
+# Executor interface + the real jax implementation
+# ---------------------------------------------------------------------------
+
+
+class Executor(Protocol):
+    """What the scheduler needs from a model.
+
+    The engine times ``prefill_forward`` into ``prefill_s`` and
+    ``decode_forward`` + ``sample`` into ``decode_s``; implementations
+    should block on device results inside these calls so the timings are
+    honest.  ``tests/engine_sim.py`` provides a pure-numpy deterministic
+    implementation with slot-hygiene assertions.
+    """
+
+    n_slots: int
+
+    def prefill_forward(self, slot: int, prompt: np.ndarray, extras: dict):
+        """Run the prompt through the model into cache slot ``slot``;
+        return the last position's logits ``(1, 1, V)`` / ``(1, 1, K, V)``."""
+        ...
+
+    def decode_forward(self, slots: Sequence[int], tokens: np.ndarray):
+        """One decode step for the live rows ``slots`` feeding ``tokens``
+        ``(B, 1)`` / ``(B, K, 1)``; returns logits ``(B, 1, V[, K…])``."""
+        ...
+
+    def sample(self, logits) -> np.ndarray:
+        """Greedy tokens from one step's logits: ``(B, 1)`` / ``(B, K, 1)``."""
+        ...
+
+    def free(self, slot: int) -> None:
+        """Slot released — hygiene hook (the sim poisons the row)."""
+        ...
+
+    def dispatch_for(self, batch: int):
+        """Advisory FAµST dispatch report at live batch ``batch`` (None
+        when the model has no FAµST projections)."""
+        ...
+
+
+class LMExecutor:
+    """The real model behind the engine: a slot-paged cache pool plus
+    jitted prefill/decode closures over ``models/lm``.
+
+    * ``_prefill_fn(params, batch, pool, slot)`` prefills a fresh
+      single-row cache and writes it into pool row ``slot`` with a
+      ``dynamic_update_slice`` along the slot axis — ``slot`` is traced,
+      so admissions into different slots share one compilation (one per
+      distinct prompt length).
+    * ``_decode_fn(params, tokens, pool, slot_idx)`` gathers the live
+      rows, steps them, scatters back — one compilation per distinct
+      live batch size.
+
+    Both donate the pool, so the slot pool is updated in place
+    buffer-wise.  The FAµST dispatch staged while tracing is captured
+    (same mark technique as the old ``Server``) on ``faust_dispatch``;
+    :meth:`dispatch_for` answers the engine's per-step advisory query
+    from the unembedding chain — the projection every decode step pays.
+    """
+
+    def __init__(self, cfg, params, max_len: int, n_slots: int, mesh=None):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.distributed import sharding as shd
+        from repro.models import lm
+
+        self.cfg, self.params, self.mesh = cfg, params, mesh
+        self.max_len, self.n_slots = max_len, n_slots
+        self._jnp, self._lm = jnp, lm
+        self._act_dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        self.pool = lm.make_caches(cfg, n_slots, max_len, dtype=self._act_dtype)
+        self.faust_dispatch = None  # last decision staged into a trace
+        self._faust_op = self._build_faust_op()
+
+        dtype = self._act_dtype
+
+        def _prefill(params, batch, pool, slot):
+            with shd.use_rules(mesh, cfg.decode_policy()):
+                caches = lm.make_caches(cfg, 1, max_len, dtype=dtype)
+                logits, caches = lm.prefill(params, cfg, batch, caches)
+                pool = jax.tree_util.tree_map(
+                    lambda p, c: jax.lax.dynamic_update_slice_in_dim(
+                        p, c.astype(p.dtype), slot, axis=lm._CACHE_BATCH_AXIS
+                    ),
+                    pool,
+                    caches,
+                )
+                return logits, pool
+
+        def _decode(params, tokens, pool, slot_idx):
+            with shd.use_rules(mesh, cfg.decode_policy()):
+                caches = lm.gather_cache_slots(pool, slot_idx)
+                logits, caches = lm.decode_step(params, cfg, tokens, caches)
+                pool = lm.scatter_cache_slots(pool, caches, slot_idx)
+                return logits, pool
+
+        self._prefill_fn = jax.jit(_prefill, donate_argnums=2)
+        self._decode_fn = jax.jit(_decode, donate_argnums=2)
+
+    # -- FAµST plumbing -----------------------------------------------------
+    def _build_faust_op(self):
+        """The unembedding FaustOp (decode's per-step projection) for
+        advisory live-batch dispatch queries; None for dense models."""
+        cfg = self.cfg
+        if cfg.faust_unembed is None:
+            return None
+        head = self.params.get("unembed", {})
+        if "faust" not in head:
+            return None
+        import jax
+
+        from repro.api.operator import FaustOp
+        from repro.layers.faust_linear import params_to_blockfaust
+
+        fp = head["faust"]
+        if cfg.n_codebooks > 1:  # stacked per-codebook heads: query head 0
+            fp = jax.tree_util.tree_map(lambda t: t[0], fp)
+        op = FaustOp.from_blockfaust(
+            params_to_blockfaust(fp, cfg.faust_unembed, cfg.d_model, cfg.vocab)
+        )
+        if cfg.faust_unembed.shard is not None:
+            op = op.with_sharding(cfg.faust_unembed.shard)
+        return op
+
+    def dispatch_for(self, batch: int):
+        if self._faust_op is None:
+            return None
+        return self._faust_op.dispatch_for(batch, self._act_dtype)
+
+    # -- Executor interface -------------------------------------------------
+    def prefill_forward(self, slot: int, prompt: np.ndarray, extras: dict):
+        from repro.api import dispatch as _dispatch
+
+        jnp = self._jnp
+        batch = {"tokens": jnp.asarray(prompt)[None]}
+        for k, v in extras.items():
+            batch[k] = jnp.asarray(v)[None]
+        mark = _dispatch.last_report()
+        logits, self.pool = self._prefill_fn(
+            self.params, batch, self.pool, jnp.asarray(slot, jnp.int32)
+        )
+        logits.block_until_ready()
+        if _dispatch.last_report() is not mark:  # a FAµST layer dispatched
+            self.faust_dispatch = _dispatch.last_report()
+        return logits
+
+    def decode_forward(self, slots: Sequence[int], tokens: np.ndarray):
+        from repro.api import dispatch as _dispatch
+
+        jnp = self._jnp
+        mark = _dispatch.last_report()
+        logits, self.pool = self._decode_fn(
+            self.params,
+            jnp.asarray(tokens),
+            self.pool,
+            jnp.asarray(np.asarray(slots, np.int32)),
+        )
+        logits.block_until_ready()
+        if _dispatch.last_report() is not mark:
+            # decode-step decision: the steady-state serving path
+            self.faust_dispatch = _dispatch.last_report()
+        return logits
+
+    def sample(self, logits) -> np.ndarray:
+        """Greedy argmax of the last position — same slicing contract as
+        ``Server._sample`` (seq axis is axis 1 in both logits layouts)."""
+        jnp = self._jnp
+        step = logits[:, -1]  # (B, V) or (B, K, V)
+        tok = jnp.argmax(step, axis=-1).astype(jnp.int32)
+        if self.cfg.n_codebooks > 1:
+            return np.asarray(tok.reshape(tok.shape[0], self.cfg.n_codebooks, 1))
+        return np.asarray(tok.reshape(-1, 1))
+
+    def free(self, slot: int) -> None:
+        # Cache rows are never read unless their slot is gathered live,
+        # and a reuse prefill overwrites pos — nothing to scrub.
+        return None
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+
+class Engine:
+    """Continuous-batching scheduler over an :class:`Executor`.
+
+    ``clock`` is injectable (``tests/engine_sim.FakeClock``) so the whole
+    scheduler — admission order, slot schedule, stats — is deterministic
+    under test with zero wall-clock dependence.
+    """
+
+    def __init__(self, executor: Executor, clock: Callable[[], float] = time.monotonic):
+        self.executor = executor
+        self.clock = clock
+        self.allocator = SlotAllocator(executor.n_slots)
+        self.queue: deque[Request] = deque()
+        self.running: "OrderedDict[str, Request]" = OrderedDict()
+        self.done: dict[str, Request] = {}
+        self.stats = EngineStats()
+        self._n = 0
+
+    # -- submission / results ----------------------------------------------
+    def submit(
+        self,
+        prompt: np.ndarray,
+        max_new_tokens: int,
+        extras: dict | None = None,
+        rid: str | None = None,
+    ) -> str:
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if rid is None:
+            rid = f"r{self._n}"
+        self._n += 1
+        if rid in self.done or rid in self.running or any(
+            r.rid == rid for r in self.queue
+        ):
+            raise ValueError(f"duplicate rid {rid!r}")
+        req = Request(
+            rid=rid,
+            prompt=np.asarray(prompt),
+            max_new_tokens=int(max_new_tokens),
+            extras=dict(extras or {}),
+            arrival=self.clock(),
+        )
+        self.queue.append(req)
+        return rid
+
+    def result(self, rid: str) -> np.ndarray:
+        req = self.done.get(rid)
+        if req is None:
+            raise KeyError(f"request {rid!r} is not finished")
+        return req.output()
+
+    @property
+    def n_pending(self) -> int:
+        return len(self.queue) + len(self.running)
+
+    # -- scheduling ---------------------------------------------------------
+    def step(self) -> list[str]:
+        """One scheduler tick: admit while slots are free, then one decode
+        step over the live batch.  Returns rids finished this tick."""
+        finished: list[str] = []
+        self._admit(finished)
+        live = self._live_by_slot()
+        if live:
+            self._decode(live, finished)
+        return finished
+
+    def run(self, max_steps: int | None = None) -> list[str]:
+        """Step until every submitted request has finished."""
+        finished: list[str] = []
+        steps = 0
+        while self.n_pending:
+            finished.extend(self.step())
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                break
+        return finished
+
+    def evict(self, rid: str) -> None:
+        """Preempt a live request: free its slot and put it back at the
+        *front* of the queue.  Re-admission prefills prompt+generated, so
+        the greedy stream continues token-exactly."""
+        req = self.running.pop(rid, None)
+        if req is None:
+            raise KeyError(f"request {rid!r} is not running")
+        self.allocator.free(req.slot)
+        self.executor.free(req.slot)
+        req.slot = None
+        req.state = QUEUED
+        req.n_evictions += 1
+        self.queue.appendleft(req)
+        self.stats.evicted += 1
+
+    # -- internals ----------------------------------------------------------
+    def _live_by_slot(self) -> list[Request]:
+        # Batch rows ordered by slot index: with the lowest-free-slot
+        # allocator this makes row order a deterministic function of the
+        # schedule (and independent of dict iteration history).
+        return sorted(self.running.values(), key=lambda r: r.slot)
+
+    def _admit(self, finished: list[str]) -> None:
+        while self.queue and self.allocator.n_free:
+            req = self.queue.popleft()
+            req.slot = self.allocator.alloc(req.rid)
+            self.stats.admitted += 1
+            t0 = self.clock()
+            logits = self.executor.prefill_forward(
+                req.slot, req.prompt_full(), req.extras
+            )
+            t1 = self.clock()
+            self.stats.prefill_s += t1 - t0
+            tok = self.executor.sample(logits)  # (1, 1) / (1, K, 1)
+            t2 = self.clock()
+            # the prefill-sampled token is a decoded token: count it and
+            # its sampling time (the old ServeStats excluded both)
+            self.stats.decode_s += t2 - t1
+            self._append_token(req, np.asarray(tok[0]))
+            if req.first_token_t is None:
+                req.first_token_t = t2
+                self.stats.ttft_s[req.rid] = t2 - req.arrival
+            req.state = RUNNING
+            self.running[req.rid] = req
+            if len(req.generated) >= req.max_new_tokens:
+                self._complete(req, t2, finished)
+
+    def _decode(self, live: list[Request], finished: list[str]) -> None:
+        slots = [r.slot for r in live]
+        tokens = np.stack([r.last_token for r in live])  # (B,1)/(B,K,1)
+        b = len(live)
+        self.stats.steps += 1
+        self.stats.queue_depth.append(len(self.queue))
+        self.stats.occupancy[b] = self.stats.occupancy.get(b, 0) + 1
+        self.stats.dispatch_per_step.append(self.executor.dispatch_for(b))
+        t0 = self.clock()
+        logits = self.executor.decode_forward(slots, tokens)
+        toks = self.executor.sample(logits)  # (B,1)/(B,K,1)
+        t1 = self.clock()
+        self.stats.decode_s += t1 - t0
+        for i, req in enumerate(live):
+            self._append_token(req, np.asarray(toks[i]))
+            if len(req.generated) >= req.max_new_tokens:
+                self._complete(req, t1, finished)
+        self.stats.faust_dispatch = getattr(
+            self.executor, "faust_dispatch", self.stats.faust_dispatch
+        )
+
+    def _append_token(self, req: Request, tok: np.ndarray) -> None:
+        req.generated.append(tok)
+        req.last_token = tok
+        self.stats.tokens_decoded += 1
+
+    def _complete(self, req: Request, now: float, finished: list[str]) -> None:
+        self.allocator.free(req.slot)
+        self.executor.free(req.slot)
+        req.slot = None
+        req.state = DONE
+        req.done_t = now
+        self.running.pop(req.rid, None)
+        self.done[req.rid] = req
+        self.stats.completed += 1
+        n = len(req.generated)
+        if n > 1:
+            self.stats.tpot_s[req.rid] = (now - req.first_token_t) / (n - 1)
+        else:
+            self.stats.tpot_s[req.rid] = 0.0
+        finished.append(req.rid)

@@ -1,25 +1,37 @@
-"""Batched serving runtime: prefill + greedy decode with jitted steps.
+"""Batched serving runtime — now a thin shim over the engine.
 
-Request model: a batch of prompts (equal length after left-padding by the
-caller — the static-shape serving pattern), one prefill pass fills the
-caches, then token-by-token decode. Decode sharding follows
-``cfg.decode_policy()`` (SP decode: cache sequence on 'model').
+Request model (legacy surface): a batch of prompts (equal length after
+left-padding by the caller), one prefill fills the caches, then
+token-by-token greedy decode.  Since PR 7 the actual scheduling lives in
+:mod:`repro.runtime.engine` — ``Server.generate`` submits one
+:class:`~repro.runtime.engine.Request` per batch row to a fresh
+:class:`~repro.runtime.engine.Engine` whose slot pool is exactly the
+batch, runs it to completion, and re-stacks the rows.  Uneven-length /
+streaming workloads should use the engine directly; this class exists so
+existing call sites (and the differential tests, which use it as the
+single-request *oracle* against the engine) keep working.
 
 FAµST-parameterized models (``cfg.faust_mlp``/``cfg.faust_unembed``)
 route their projections through ``repro.api.FaustOp.apply(backend=
 "auto")`` inside the jitted steps; the last backend decision staged
 while tracing the serving computations — the decode step's, the
 steady-state path — is captured on :class:`ServeStats`
-(``faust_dispatch``) so operators can see which kernel path is serving.
-When the FaustSpecs carry a ShardSpec the decision can be
-``fused_sharded`` and the report carries the mesh shape and per-shard
-collective bytes; ``ServeStats.mesh_axes`` additionally records the
-serving mesh itself.
+(``faust_dispatch``).  When the FaustSpecs carry a ShardSpec the
+decision can be ``fused_sharded`` and the report carries the mesh shape
+and per-shard collective bytes; ``ServeStats.mesh_axes`` additionally
+records the serving mesh itself.
+
+Accounting (PR 7 bugfix): ``tokens_decoded`` now counts **every**
+sampled token — ``b · n_new_tokens`` — including the token sampled from
+the prefill logits, which the old ``b · (n_new_tokens − 1)`` loop
+excluded from both the count and ``decode_s`` (undercounting
+``tokens_per_s`` by one token per stream).  The decode timer starts
+after the prefill forward and before the first sample, so every counted
+token's sampling time is inside ``decode_s``.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any
 
 import jax
@@ -27,10 +39,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.api import dispatch as _dispatch
 from repro.configs.base import ArchConfig
-from repro.distributed import sharding as shd
-from repro.models import lm
+from repro.runtime.engine import Engine, LMExecutor
 
 Array = jax.Array
 
@@ -57,17 +67,7 @@ class Server:
         # dispatch only runs at trace time — remember the decision from the
         # first (cold) generate() so warm-cache calls still report it
         self._faust_dispatch = None
-
-        def _prefill(params, batch, caches):
-            with shd.use_rules(mesh, cfg.decode_policy()):
-                return lm.prefill(params, cfg, batch, caches)
-
-        def _decode(params, tokens, caches):
-            with shd.use_rules(mesh, cfg.decode_policy()):
-                return lm.decode_step(params, cfg, tokens, caches)
-
-        self.prefill_fn = jax.jit(_prefill, donate_argnums=2)
-        self.decode_fn = jax.jit(_decode, donate_argnums=2)
+        self._executor: LMExecutor | None = None  # reused across generate()s
 
     def _sample(self, logits: Array) -> Array:
         """Greedy next-token pick from one step's full logits.
@@ -76,11 +76,11 @@ class Server:
         multi-codebook (``models/lm._logits`` stacks codebooks on the
         axis *before* vocab) — the sequence axis is axis 1 in both
         layouts, and both prefill and decode_step emit S == 1.  The last
-        position is sliced *here*, once and explicitly; the call sites
-        used to carry ``x if cond else x`` conditionals whose branches
-        were identical, which only worked because the two layouts happen
-        to share the seq axis.  Returns decode_step-shaped tokens:
-        ``(B, K, 1)`` multi-codebook, ``(B, 1)`` otherwise.
+        position is sliced *here*, once and explicitly.  Returns
+        decode_step-shaped tokens: ``(B, K, 1)`` multi-codebook,
+        ``(B, 1)`` otherwise.  (The engine's ``LMExecutor.sample`` has
+        the same contract; this method remains the documented reference
+        and the unit-test surface.)
         """
         step = logits[:, -1]  # (B, V) or (B, K, V)
         tok = jnp.argmax(step, axis=-1).astype(jnp.int32)  # greedy
@@ -88,37 +88,41 @@ class Server:
             return tok.reshape(tok.shape[0], self.cfg.n_codebooks, 1)
         return tok.reshape(-1, 1)
 
-    def generate(self, batch: dict, n_new_tokens: int) -> tuple[np.ndarray, ServeStats]:
-        cfg = self.cfg
-        b = batch["tokens"].shape[0]
-        stats = ServeStats()
-        caches = lm.make_caches(
-            cfg, b, self.max_len,
-            dtype=jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32,
-        )
-        mark = _dispatch.last_report()
-        t0 = time.monotonic()
-        logits, caches = self.prefill_fn(self.params, batch, caches)
-        logits.block_until_ready()
-        stats.prefill_s = time.monotonic() - t0
+    def _executor_for(self, b: int) -> LMExecutor:
+        ex = self._executor
+        if ex is None or ex.n_slots != b:
+            ex = LMExecutor(
+                self.cfg, self.params, self.max_len, n_slots=b, mesh=self.mesh
+            )
+            self._executor = ex
+        return ex
 
-        outs = []
-        tok = self._sample(logits)
-        outs.append(np.asarray(tok))
-        t0 = time.monotonic()
-        for _ in range(n_new_tokens - 1):
-            logits, caches = self.decode_fn(self.params, tok, caches)
-            tok = self._sample(logits)
-            outs.append(np.asarray(tok))
-        jax.block_until_ready(tok)
-        stats.decode_s = time.monotonic() - t0
-        stats.tokens_decoded = b * (n_new_tokens - 1)
-        if _dispatch.last_report() is not mark:  # a FAµST layer dispatched
-            # decode traces after prefill, so this is the decode-step
-            # decision (the steady-state serving path) when both ran
-            self._faust_dispatch = _dispatch.last_report()
+    def generate(self, batch: dict, n_new_tokens: int) -> tuple[np.ndarray, ServeStats]:
+        b = batch["tokens"].shape[0]
+        ex = self._executor_for(b)
+        engine = Engine(ex)
+        rids = []
+        for i in range(b):
+            extras = {
+                k: np.asarray(v[i]) for k, v in batch.items() if k != "tokens"
+            }
+            rids.append(
+                engine.submit(
+                    np.asarray(batch["tokens"][i]), n_new_tokens, extras=extras
+                )
+            )
+        engine.run()
+        gen = np.stack([engine.result(r) for r in rids], axis=0)
+
+        es = engine.stats
+        stats = ServeStats(
+            prefill_s=es.prefill_s,
+            decode_s=es.decode_s,
+            tokens_decoded=es.tokens_decoded,  # == b * n_new_tokens
+        )
+        if ex.faust_dispatch is not None:
+            self._faust_dispatch = ex.faust_dispatch
         stats.faust_dispatch = self._faust_dispatch
         if self.mesh is not None:
             stats.mesh_axes = {str(a): int(s) for a, s in self.mesh.shape.items()}
-        gen = np.concatenate(outs, axis=-1)
         return gen, stats

@@ -1,0 +1,141 @@
+"""Deterministic simulation harness for the serving engine.
+
+Everything the scheduler (:class:`repro.runtime.engine.Engine`) observes
+is injectable: time comes from :class:`FakeClock` (manual advance, zero
+wall-clock dependence) and the model is :class:`SimExecutor` — a
+pure-numpy deterministic "LM" whose next token is a fixed recurrence
+over the stream's token history, *computed from the slot's cache row*.
+That design makes the two properties the tests need fall out directly:
+
+* **batch-schedule invariance** — each row's logits depend only on that
+  row's history (exactly like real greedy decode rows), so any batching
+  schedule must produce token-identical streams, and
+  :func:`reference_stream` is a closed-form single-stream oracle;
+* **slot hygiene is observable** — freed rows are poisoned with large
+  *finite* garbage (``POISON``; NaN would be the classic choice, but in
+  a real masked-softmax model NaN propagates through the max even when
+  masked — the repo's cache masking works by position, so the sim
+  mirrors that with finite poison) and the executor asserts on any read
+  of a freed or double-freed slot.  If the scheduler ever decodes a
+  freed slot, gathers a stale row, or feeds one slot twice in a step,
+  the sim fails loudly instead of silently serving garbage.
+
+Used by ``tests/test_engine_sim.py`` (differential + scripted-trace
+tests) and ``tests/test_engine_sched.py`` (seeded property sweeps).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+# Large finite garbage for freed cache rows: corrupts any stream that
+# actually reads a freed row (value lands far outside vocab) without the
+# NaN-through-masked-softmax false-positive a real model would hit.
+POISON = 10**9
+
+
+class FakeClock:
+    """Injectable engine clock: ``clock()`` returns the current fake time
+    and advances it by ``tick`` (so TTFT/TPOT are deterministic nonzero);
+    ``advance`` scripts arrival gaps."""
+
+    def __init__(self, t0: float = 0.0, tick: float = 0.0):
+        self.now = float(t0)
+        self.tick = float(tick)
+
+    def __call__(self) -> float:
+        t = self.now
+        self.now += self.tick
+        return t
+
+    def advance(self, dt: float) -> None:
+        self.now += dt
+
+
+class SimExecutor:
+    """Pure-numpy deterministic model behind the Executor interface.
+
+    The "model": a stream with history ``t_1..t_n`` emits
+    ``next = (Σ_i t_i · mix_i) mod vocab`` where ``mix`` is a seeded
+    per-position multiplier table — deterministic, history-sensitive
+    (evicting and re-prefilling must reproduce it exactly), and cheap.
+    State lives in a per-slot cache row, mirroring the real slot-paged
+    pool: prefill rewrites the row, decode appends the fed token then
+    reads the row, ``free`` poisons it.
+    """
+
+    def __init__(self, n_slots: int, max_len: int, vocab: int = 97, seed: int = 0):
+        self.n_slots, self.max_len, self.vocab = n_slots, max_len, vocab
+        rng = np.random.default_rng(seed)
+        self.mix = rng.integers(1, vocab, size=max_len).astype(np.int64)
+        self.cache = np.full((n_slots, max_len), POISON, np.int64)
+        self.pos = np.full((n_slots,), -1, np.int64)  # -1 ⇔ freed
+        self.calls: list = []  # (op, slots) log for scheduler assertions
+
+    # -- the recurrence -----------------------------------------------------
+    def _next_from_row(self, slot: int) -> int:
+        n = int(self.pos[slot])
+        assert n >= 1, f"read of freed slot {slot}"
+        hist = self.cache[slot, :n]
+        assert (0 <= hist).all() and (hist < self.vocab).all(), (
+            f"poisoned (freed/stale) cache row read for slot {slot}"
+        )
+        return int((hist * self.mix[:n]).sum() % self.vocab)
+
+    # -- Executor interface -------------------------------------------------
+    def prefill_forward(self, slot: int, prompt: np.ndarray, extras: dict):
+        assert 0 <= slot < self.n_slots, f"slot {slot} out of range"
+        prompt = np.asarray(prompt)
+        assert prompt.ndim == 1, "sim models single-codebook streams"
+        n = prompt.shape[0]
+        assert 1 <= n <= self.max_len
+        self.calls.append(("prefill", (slot,)))
+        self.cache[slot] = POISON  # fresh occupant: no stale carryover
+        self.cache[slot, :n] = prompt
+        self.pos[slot] = n
+        lg = np.zeros((1, 1, self.vocab), np.float32)
+        lg[0, 0, self._next_from_row(slot)] = 1.0
+        return lg
+
+    def decode_forward(self, slots, tokens):
+        slots = [int(s) for s in slots]
+        assert len(set(slots)) == len(slots), "slot fed twice in one step"
+        self.calls.append(("decode", tuple(slots)))
+        toks = np.asarray(tokens)  # (B, 1)
+        lg = np.zeros((len(slots), 1, self.vocab), np.float32)
+        for i, s in enumerate(slots):
+            assert self.pos[s] >= 1, f"decode of freed slot {s}"
+            n = int(self.pos[s])
+            assert n < self.max_len, f"slot {s} overflows max_len"
+            self.cache[s, n] = int(toks[i, 0])
+            self.pos[s] = n + 1
+            lg[i, 0, self._next_from_row(s)] = 1.0
+        return lg
+
+    def sample(self, logits) -> np.ndarray:
+        step = np.asarray(logits)[:, -1]  # (B, V)
+        return np.argmax(step, axis=-1).astype(np.int32).reshape(-1, 1)
+
+    def free(self, slot: int) -> None:
+        assert self.pos[slot] >= 0, f"double free of slot {slot}"
+        self.calls.append(("free", (slot,)))
+        self.cache[slot] = POISON
+        self.pos[slot] = -1
+
+    def dispatch_for(self, batch: int):
+        return None
+
+
+def reference_stream(
+    prompt: np.ndarray, n_new: int, mix: np.ndarray, vocab: int
+) -> np.ndarray:
+    """Closed-form single-stream oracle for :class:`SimExecutor`'s
+    recurrence — what the engine must produce for this request under
+    *any* batching/eviction schedule."""
+    hist = [int(t) for t in np.asarray(prompt)]
+    out = []
+    for _ in range(n_new):
+        h = np.asarray(hist, np.int64)
+        val = int((h * mix[: len(h)]).sum() % vocab)
+        out.append(val)
+        hist.append(val)
+    return np.asarray(out, np.int32)

@@ -80,7 +80,23 @@ def test_generate_multi_codebook_shapes_and_range():
     assert gen.shape == (b, cfg.n_codebooks, n_new)
     assert gen.dtype == np.int32
     assert (gen >= 0).all() and (gen < cfg.vocab).all()
-    assert stats.tokens_decoded == b * (n_new - 1)
+    assert stats.tokens_decoded == b * n_new
+
+
+def test_tokens_decoded_counts_prefill_sampled_token():
+    """Accounting regression (PR 7 bugfix): the token sampled from the
+    prefill logits is a decoded token.  The old loop reported
+    ``b * (n_new - 1)`` — excluding it from both ``tokens_decoded`` and
+    ``decode_s`` — so ``tokens_per_s`` undercounted by one token per
+    stream; worst at n_new=1, where it reported zero decoded tokens."""
+    b, s = 2, 6
+    cfg, srv, batch = _server_for("gemma_2b", b, s, max_len=s + 4)
+    gen, stats = srv.generate(batch, 1)
+    assert gen.shape == (b, 1)
+    assert stats.tokens_decoded == b * 1  # old accounting said 0
+    gen, stats = srv.generate(batch, 4)
+    assert stats.tokens_decoded == b * 4
+    assert stats.decode_s > 0 and stats.tokens_per_s > 0
 
 
 def test_generate_multi_codebook_matches_stepwise_argmax():

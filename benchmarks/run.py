@@ -31,6 +31,10 @@ tracked across PRs, e.g.::
                         Poisson load: per-decode-step time, p50/p99
                         latency, TTFT, tokens/s, batch occupancy
                         (EXPERIMENTS.md §Serving engine)
+  streaming_track     — time-varying operator under scripted drift:
+                        warm StreamingFaust tracking vs cold per-snapshot
+                        refactorization — RE-vs-updates and sweeps/us per
+                        update (EXPERIMENTS.md §Streaming factorization)
 """
 from __future__ import annotations
 
@@ -83,6 +87,7 @@ def main() -> None:
         serve_load,
         shard_scaling,
         source_localization,
+        streaming_track,
         svd_comparison,
     )
 
@@ -97,6 +102,7 @@ def main() -> None:
         "batch_compress": batch_compress.run,
         "shard_scaling": shard_scaling.run,
         "serve_load": serve_load.run,
+        "streaming_track": streaming_track.run,
     }
     names = args.only.split(",") if args.only else list(table)
     print("name,us_per_call,derived")

@@ -100,6 +100,21 @@ if [ "${REPRO_SKIP_BENCH:-0}" != "1" ]; then
         echo "ci: PERF REGRESSION vs BENCH_baseline.json"
         exit 1
     fi
+    # Streaming-track smoke (2 drift steps, tiny shapes): proves the
+    # warm-vs-cold tracking pipeline end to end; the sweep-budget claim
+    # itself is asserted in tests/test_streaming.py, the wall-µs rows are
+    # gated (informationally, sub-100µs rows excepted) like the rest.
+    if ! PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} REPRO_ROOFLINE=builtin \
+        REPRO_AUTOTUNE=off REPRO_STREAM_SMOKE=1 timeout "$CI_TIMEOUT" \
+        python benchmarks/run.py --only streaming_track \
+        --json /tmp/repro_bench_stream.json > /dev/null; then
+        echo "ci: STREAMING BENCH SMOKE FAILED TO RUN"
+        exit 1
+    fi
+    if ! python scripts/check_bench.py /tmp/repro_bench_stream.json; then
+        echo "ci: STREAMING BENCH SMOKE REGRESSION"
+        exit 1
+    fi
     echo "ci: bench leg OK"
 else
     echo "ci: bench leg skipped (REPRO_SKIP_BENCH=1)"

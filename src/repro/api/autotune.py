@@ -175,9 +175,12 @@ def lookup(key: str) -> dict | None:
 def record(key: str, entry: dict, path: str | None = None) -> None:
     """Merge one measured entry into the persisted table (atomic rename;
     read-modify-write so concurrent tuners lose at most their own key)."""
-    path = path or table_path()
     table = load_table() or {"version": TABLE_VERSION, "entries": {}}
     table["entries"][key] = entry
+    _write_table(table, path or table_path())
+
+
+def _write_table(table: dict, path: str) -> None:
     os.makedirs(os.path.dirname(os.path.abspath(path)) or ".", exist_ok=True)
     fd, tmp = tempfile.mkstemp(
         dir=os.path.dirname(os.path.abspath(path)), suffix=".tmp"
@@ -195,6 +198,54 @@ def record(key: str, entry: dict, path: str | None = None) -> None:
         raise
     finally:
         _STATE["stamp"] = None  # next load_table() re-reads the file
+
+
+def key_for_op(op, *, batch: int, dtype, grad: bool, mesh_shape) -> str:
+    """:func:`key_of` from an operator — the one spelling used by dispatch,
+    measurement, and the hot-swap layer, so the three can never disagree
+    about what identifies a timing."""
+    import jax
+    import jax.numpy as jnp
+
+    return key_of(
+        shape=op.shape,
+        n_factors=op.n_factors,
+        s_tot=op.s_tot,
+        batch=batch,
+        dtype=jnp.dtype(dtype).name,
+        grad=grad,
+        mesh_shape=mesh_shape,
+        device=jax.default_backend(),
+    )
+
+
+def op_key_prefix(op) -> str:
+    """Key prefix shared by every (batch, dtype, grad, mesh, device) entry
+    of one operator *signature* — shape, chain length, stored nonzeros.
+
+    This is the hot-swap invariant in one string: a values-only swap keeps
+    the signature, so existing measured entries stay valid and keep
+    hitting; a support change that alters ``s_tot`` (different k) moves to
+    a fresh prefix and re-prices from the model naturally.  The one case
+    needing explicit action — support moved but ``s_tot`` happens to
+    survive (sharding collective crossings may differ) — is handled by
+    :func:`invalidate` from :func:`repro.streaming.swap.hot_swap`."""
+    return f"{op.shape[0]}x{op.shape[1]}|J{op.n_factors}|s{op.s_tot}|"
+
+
+def invalidate(prefix: str, path: str | None = None) -> int:
+    """Drop every measured entry whose key starts with ``prefix`` from the
+    persisted table (atomic rewrite, :func:`record`'s contract).  Returns
+    the number of entries removed; missing/unreadable tables drop 0."""
+    table = load_table()
+    if table is None:
+        return 0
+    victims = [k for k in table["entries"] if k.startswith(prefix)]
+    if victims:
+        for k in victims:
+            del table["entries"][k]
+        _write_table(table, path or table_path())
+    return len(victims)
 
 
 # ---------------------------------------------------------------------------
@@ -355,21 +406,13 @@ def ensure_measured(
     Callers gate on the *mode* — this function only guards feasibility.
     """
     import jax
-    import jax.numpy as jnp
 
     if _MEASURING or op.kind != "leaf":
         return None
     if not jax.core.trace_state_clean() or isinstance(x, jax.core.Tracer):
         return None
-    key = key_of(
-        shape=op.shape,
-        n_factors=op.n_factors,
-        s_tot=op.s_tot,
-        batch=batch,
-        dtype=jnp.dtype(dtype).name,
-        grad=grad,
-        mesh_shape=mesh_shape,
-        device=jax.default_backend(),
+    key = key_for_op(
+        op, batch=batch, dtype=dtype, grad=grad, mesh_shape=mesh_shape
     )
     table = load_table()
     if table is not None and isinstance(table["entries"].get(key), dict):

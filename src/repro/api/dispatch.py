@@ -406,15 +406,16 @@ def dispatch(
 
     entry = None
     if requested == "auto" and _autotune.autotune_mode() != "off":
-        key = _autotune.key_of(
-            shape=op.shape,
-            n_factors=op.n_factors,
-            s_tot=op.s_tot,
+        # key_for_op is the one shared spelling of the lookup key — the
+        # measurement layer and the hot-swap invalidator build the same
+        # string, so a values-only swap keeps hitting and an invalidated
+        # signature reliably misses.
+        key = _autotune.key_for_op(
+            op,
             batch=batch,
-            dtype=jnp.dtype(dtype).name,
+            dtype=dtype,
             grad=grad,
             mesh_shape=shard.get("mesh_shape") if shard is not None else None,
-            device=jax.default_backend(),
         )
         entry = _autotune.lookup(key)
     eff_bt = bt if bt is not None else (

@@ -131,6 +131,27 @@ class FactorizeSpec:
     dict_sparse_coding: Callable[[Array, Array], Array] | None = None
 
 
+@dataclasses.dataclass(frozen=True)
+class TargetPrep:
+    """How ``factorize`` preprocessed the target before solving.
+
+    The block route pads W to the block grid and may transpose (so the
+    square residuals sit on the small side); anything re-solving against a
+    *new* target with the same spec — the streaming tracker — must apply
+    the identical prep to compare/refine in the solver's frame.
+    ``pad_in``/``pad_out`` are the trailing zero-paddings of W's (in, out)
+    axes; non-block routes are the identity prep."""
+
+    transpose: bool = False
+    pad_in: int = 0
+    pad_out: int = 0
+
+    def apply(self, w: Array) -> Array:
+        if self.pad_in or self.pad_out:
+            w = jnp.pad(w, ((0, self.pad_in), (0, self.pad_out)))
+        return w.T if self.transpose else w
+
+
 @dataclasses.dataclass
 class FactorizeInfo:
     """Everything a ``factorize`` run learned beyond the operator itself."""
@@ -143,6 +164,11 @@ class FactorizeInfo:
     hierarchical: HierarchicalInfo | None = None
     loss_history: Array | None = None  # flat palm4msa route
     gamma: Array | None = None  # dictionary route
+    # resolved constraint schedule + target prep (hierarchical routes) —
+    # what a warm re-solve against a drifted target needs (streaming layer)
+    hier_spec: HierarchicalSpec | None = None
+    prep: TargetPrep = TargetPrep()
+    n_sweeps: int = 0  # total PALM sweeps paid (cold-refactorization cost)
 
 
 def _finish(
@@ -155,6 +181,9 @@ def _finish(
     loss_history: Array | None = None,
     gamma: Array | None = None,
     shard: ShardSpec | None = None,
+    hier_spec: HierarchicalSpec | None = None,
+    prep: TargetPrep | None = None,
+    n_sweeps: int | None = None,
 ) -> tuple[FaustOp, FactorizeInfo]:
     if shard is not None and blockfausts is not None:
         from repro.kernels.chain_sharded import place_blockfaust
@@ -167,6 +196,8 @@ def _finish(
     ops = [FaustOp.wrap(r) for r in reps]
     if shard is not None:
         ops = [o.with_sharding(shard) for o in ops]
+    if n_sweeps is None:
+        n_sweeps = hierarchical.cache.sweeps if hierarchical is not None else 0
     info = FactorizeInfo(
         strategy=strategy,
         batched=batched,
@@ -176,6 +207,9 @@ def _finish(
         hierarchical=hierarchical,
         loss_history=loss_history,
         gamma=gamma,
+        hier_spec=hier_spec,
+        prep=prep if prep is not None else TargetPrep(),
+        n_sweeps=n_sweeps,
     )
     op = ops[0] if len(ops) == 1 else block_diag(ops)
     return op, info
@@ -196,7 +230,7 @@ def _factorize_block_single(
     k_resid: Sequence[int] | None = None,
     n_iter_two: int = 40,
     n_iter_global: int = 40,
-) -> tuple[BlockFaust, Faust, HierarchicalInfo]:
+) -> tuple[BlockFaust, Faust, HierarchicalInfo, HierarchicalSpec, TargetPrep]:
     """Factorize a dense ``W (in, out)`` into a deployment BlockFaust.
 
     Orientation (the paper's MEG setting wants square residuals on the
@@ -215,7 +249,8 @@ def _factorize_block_single(
     )
     faust, info = hierarchical_factorization(a, spec)
     bfaust = _faust_to_blockfaust(faust, transpose, bk, bn, in_f, out_f)
-    return bfaust, faust, info
+    prep = TargetPrep(transpose, (-in_f) % bk, (-out_f) % bn)
+    return bfaust, faust, info, spec, prep
 
 
 def _factorize_block_batched(
@@ -228,7 +263,10 @@ def _factorize_block_batched(
     k_resid: Sequence[int] | None = None,
     n_iter_two: int = 40,
     n_iter_global: int = 40,
-) -> tuple[list[BlockFaust], list[Faust], HierarchicalInfo]:
+) -> tuple[
+    list[BlockFaust], list[Faust], HierarchicalInfo, HierarchicalSpec,
+    TargetPrep,
+]:
     """Block route over a stack ``ws (B, in, out)``: every hierarchical
     (split, refine) step is one ``palm4msa_batched`` solve for the whole
     stack — one compile regardless of B, per-matrix parity with the
@@ -248,7 +286,7 @@ def _factorize_block_batched(
     bfausts = [
         _faust_to_blockfaust(f, transpose, bk, bn, in_f, out_f) for f in fausts
     ]
-    return bfausts, fausts, info
+    return bfausts, fausts, info, spec, TargetPrep(transpose, pi, po)
 
 
 # ---------------------------------------------------------------------------
@@ -318,7 +356,7 @@ def factorize(a: Array, spec: FactorizeSpec) -> tuple[FaustOp, FactorizeInfo]:
         fausts = [faust]
     return _finish(
         spec.strategy, batched, fausts, hierarchical=info,
-        shard=_shard_of(spec),
+        shard=_shard_of(spec), hier_spec=hier,
     )
 
 
@@ -329,13 +367,13 @@ def _route_block(a, spec: FactorizeSpec, batched: bool):
         n_iter_two=spec.n_iter_two, n_iter_global=spec.n_iter_global,
     )
     if batched:
-        bfs, fausts, info = _factorize_block_batched(a, **kw)
+        bfs, fausts, info, hier, prep = _factorize_block_batched(a, **kw)
     else:
-        bf, faust, info = _factorize_block_single(a, **kw)
+        bf, faust, info, hier, prep = _factorize_block_single(a, **kw)
         bfs, fausts = [bf], [faust]
     return _finish(
         spec.strategy, batched, fausts, blockfausts=bfs, hierarchical=info,
-        shard=_shard_of(spec),
+        shard=_shard_of(spec), hier_spec=hier, prep=prep,
     )
 
 
@@ -362,7 +400,7 @@ def _route_palm(a, spec: FactorizeSpec, batched: bool):
         fausts = [Faust(res.factors, res.lam)]
     return _finish(
         spec.strategy, batched, fausts, loss_history=res.loss_history,
-        shard=_shard_of(spec),
+        shard=_shard_of(spec), n_sweeps=spec.n_iter,
     )
 
 
@@ -379,5 +417,5 @@ def _route_dictionary(a, spec: FactorizeSpec):
     )
     return _finish(
         spec.strategy, False, [faust], hierarchical=info, gamma=gamma,
-        shard=_shard_of(spec),
+        shard=_shard_of(spec), hier_spec=spec.hier,
     )

@@ -52,10 +52,15 @@ class CacheStats:
     was not seen before in this process — i.e. a solve that pays an XLA
     trace+compile.  A *hit* reuses an existing trace (the Python-level
     bucket set mirrors jax's own jit cache key: array shapes/dtypes plus the
-    value-hashable static arguments)."""
+    value-hashable static arguments).
+
+    ``sweeps`` counts the PALM sweeps actually run (Σ n_iter over solves) —
+    the unit the streaming layer budgets warm tracking against a cold
+    refactorization in (:mod:`repro.streaming.online`)."""
 
     hits: int = 0
     misses: int = 0
+    sweeps: int = 0
 
     @property
     def total(self) -> int:
@@ -75,6 +80,11 @@ class HierarchicalInfo:
     global_losses: list
     cache: CacheStats
     jit_cache_size: int
+
+    @property
+    def n_sweeps(self) -> int:
+        """Total PALM sweeps this run paid (cold-refactorization cost unit)."""
+        return self.cache.sweeps
 
 
 _SEEN_BUCKETS: set = set()
@@ -102,6 +112,7 @@ def reset_trace_cache() -> None:
     _SEEN_BUCKETS.clear()
     _GLOBAL_STATS.hits = 0
     _GLOBAL_STATS.misses = 0
+    _GLOBAL_STATS.sweeps = 0
     for fn in (palm4msa, palm4msa_batched):
         getattr(fn, "clear_cache", lambda: None)()
 
@@ -129,8 +140,10 @@ def _run_palm(stats: CacheStats, a: Array, factors, lam, projs, n_iter, *,
         _SEEN_BUCKETS.add(bucket)
     stats.hits += hit
     stats.misses += not hit
+    stats.sweeps += n_iter
     _GLOBAL_STATS.hits += hit
     _GLOBAL_STATS.misses += not hit
+    _GLOBAL_STATS.sweeps += n_iter
     fn = palm4msa_batched if batched else palm4msa
     return fn(
         a, factors, lam, projs, n_iter,

@@ -210,15 +210,18 @@ def _palm_scan(
 )
 def palm4msa(
     a: Array,
-    factors: tuple[Array, ...],
-    lam: Array,
-    projs: tuple[Proj, ...],
-    n_iter: int,
+    factors: tuple[Array, ...] | None = None,
+    lam: Array | None = None,
+    projs: tuple[Proj, ...] = (),
+    n_iter: int = 0,
     frozen: tuple[bool, ...] | None = None,
     alpha: float = 1e-3,
     power_iters: int = 24,
     keep_best: bool = True,
     init_feasible: bool = False,
+    *,
+    init_factors: tuple[Array, ...] | None = None,
+    init_lam: Array | None = None,
 ) -> PalmResult:
     """Run ``n_iter`` PALM sweeps (paper Fig. 4). Returns loss history.
 
@@ -241,7 +244,19 @@ def palm4msa(
     making refinement a no-worse-than-init operation. Two-factor splits
     pass False: their warm init (identity/residual carry) is deliberately
     infeasible and must not be returned.
+
+    ``init_factors``/``init_lam``: keyword spelling of a *warm start* — a
+    previously converged (or drifted) factor state to resume from, e.g.
+    streaming re-factorization of a slowly varying target
+    (:mod:`repro.streaming.online`). Mutually exclusive with the
+    positional ``factors``/``lam``. Warm starts came out of projections,
+    so pass ``init_feasible=True`` with them: combined with ``keep_best``
+    a warm sweep is then no-worse-than-init, and a start at a converged
+    state is a fixed point (re-converges in ≤1 sweep). Same-shaped warm
+    sweeps with identical ``make_proj`` schedules hit this function's jit
+    cache — repeated streaming updates never retrace.
     """
+    factors, lam = _resolve_init(factors, lam, init_factors, init_lam)
     if frozen is None:
         frozen = (False,) * len(factors)
     assert len(projs) == len(factors) == len(frozen)
@@ -250,6 +265,31 @@ def palm4msa(
         power_iters, n_iter, keep_best, init_feasible, batched=False,
     )
     return PalmResult(out.factors, out.lam, losses)
+
+
+def _resolve_init(
+    factors: tuple[Array, ...] | None,
+    lam: Array | None,
+    init_factors: tuple[Array, ...] | None,
+    init_lam: Array | None,
+) -> tuple[tuple[Array, ...], Array]:
+    """Merge the positional init with the keyword warm-start spelling.
+
+    Exactly one of ``factors``/``init_factors`` must be given; λ defaults
+    to 1 when omitted (runs at trace time — zero cost under jit)."""
+    if (factors is None) == (init_factors is None):
+        raise ValueError(
+            "pass exactly one of `factors` (positional) or `init_factors=` "
+            f"(warm start); got factors={'set' if factors is not None else None}, "
+            f"init_factors={'set' if init_factors is not None else None}"
+        )
+    if factors is None:
+        if lam is not None:
+            raise ValueError("`lam` belongs to positional init; use `init_lam=`")
+        factors, lam = tuple(init_factors), init_lam
+    elif init_lam is not None:
+        raise ValueError("`init_lam` belongs to `init_factors=`; use `lam`")
+    return tuple(factors), (jnp.asarray(1.0) if lam is None else lam)
 
 
 def palm4msa_faust(
@@ -279,15 +319,18 @@ def palm4msa_faust(
 )
 def palm4msa_batched(
     a: Array,
-    factors: tuple[Array, ...],
-    lam: Array,
-    projs: tuple[Proj, ...],
-    n_iter: int,
+    factors: tuple[Array, ...] | None = None,
+    lam: Array | None = None,
+    projs: tuple[Proj, ...] = (),
+    n_iter: int = 0,
     frozen: tuple[bool, ...] | None = None,
     alpha: float = 1e-3,
     power_iters: int = 24,
     keep_best: bool = True,
     init_feasible: bool = False,
+    *,
+    init_factors: tuple[Array, ...] | None = None,
+    init_lam: Array | None = None,
 ) -> PalmResult:
     """:func:`palm4msa` over a leading batch axis: solve ``B`` same-shaped
     problems in **one** jitted ``lax.scan`` (one trace, one dispatch).
@@ -309,7 +352,12 @@ def palm4msa_batched(
     scale: compressing every same-shaped weight of a model (or a per-σ
     dictionary sweep, §VI-C) pays one XLA compile for the whole stack
     instead of a Python loop over retraces.
+
+    ``init_factors=``/``init_lam=`` warm-start exactly as in
+    :func:`palm4msa` (leaves carry the leading batch axis; ``init_lam``
+    scalar or ``(B,)``) — pass ``init_feasible=True`` with them.
     """
+    factors, lam = _resolve_init(factors, lam, init_factors, init_lam)
     if frozen is None:
         frozen = (False,) * len(factors)
     assert len(projs) == len(factors) == len(frozen)

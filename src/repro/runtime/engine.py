@@ -191,6 +191,7 @@ class EngineStats:
     admitted: int = 0  # prefills run (re-admissions count again)
     completed: int = 0
     evicted: int = 0
+    swaps: int = 0  # operator hot-swaps published (streaming.swap)
     # per-decode-step observability
     queue_depth: list = dataclasses.field(default_factory=list)
     occupancy: dict = dataclasses.field(default_factory=dict)  # B_live -> steps
@@ -345,6 +346,51 @@ class LMExecutor:
         if self._faust_op is None:
             return None
         return self._faust_op.dispatch_for(batch, self._act_dtype)
+
+    def unembed_blockfaust(self):
+        """The currently-published unembedding chain as a
+        :class:`~repro.core.compress.BlockFaust` (None for dense models) —
+        what :func:`repro.streaming.swap.hot_swap` classifies a refresh
+        against."""
+        cfg = self.cfg
+        if cfg.faust_unembed is None or "faust" not in self.params.get(
+            "unembed", {}
+        ):
+            return None
+        from repro.layers.faust_linear import params_to_blockfaust
+
+        return params_to_blockfaust(
+            self.params["unembed"]["faust"], cfg.faust_unembed,
+            cfg.d_model, cfg.vocab,
+        )
+
+    def swap_unembed(self, bf) -> None:
+        """Publish a refreshed unembedding chain between engine steps.
+
+        Functional params update (the old tree is untouched — an in-flight
+        jitted call keeps its arguments) + advisory-op rebuild.  Because
+        ``params`` is a per-call argument of the jitted prefill/decode
+        closures, a swap whose arrays keep their shapes/dtypes reuses the
+        compiled caches untouched (values-only swap); changed support
+        sizes retrace on the next call — the staged re-pack.  Policy
+        (classification, autotune invalidation, stats) lives in
+        :mod:`repro.streaming.swap` — this is only the publication
+        primitive.
+        """
+        cfg = self.cfg
+        if cfg.faust_unembed is None or "faust" not in self.params.get(
+            "unembed", {}
+        ):
+            raise ValueError("model has no FAµST unembedding to swap")
+        if cfg.n_codebooks > 1:
+            raise NotImplementedError("hot-swap of stacked per-codebook heads")
+        from repro.layers.faust_linear import blockfaust_to_params
+        from repro.layers.param import split_annotations
+
+        unembed = dict(self.params["unembed"])
+        unembed["faust"], _ = split_annotations(blockfaust_to_params(bf))
+        self.params = {**self.params, "unembed": unembed}
+        self._faust_op = self._build_faust_op()
 
     # -- Executor interface -------------------------------------------------
     def prefill_forward(self, slot: int, prompt: np.ndarray, extras: dict):

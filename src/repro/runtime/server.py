@@ -88,6 +88,43 @@ class Server:
             return tok.reshape(tok.shape[0], self.cfg.n_codebooks, 1)
         return tok.reshape(-1, 1)
 
+    def unembed_blockfaust(self):
+        """Currently-published unembedding chain (None for dense models)."""
+        if self._executor is not None:
+            return self._executor.unembed_blockfaust()
+        if self.cfg.faust_unembed is None or "faust" not in self.params.get(
+            "unembed", {}
+        ):
+            return None
+        from repro.layers.faust_linear import params_to_blockfaust
+
+        return params_to_blockfaust(
+            self.params["unembed"]["faust"], self.cfg.faust_unembed,
+            self.cfg.d_model, self.cfg.vocab,
+        )
+
+    def swap_unembed(self, bf) -> None:
+        """Publish a refreshed unembedding chain between ``generate()``
+        calls: the cached executor (if one exists) swaps in place — its
+        jit caches survive a values-only swap — and ``self.params`` is
+        refreshed so future executors are built from the new chain.
+        Policy lives in :mod:`repro.streaming.swap` (same contract as
+        :meth:`LMExecutor.swap_unembed`)."""
+        if self._executor is not None:
+            self._executor.swap_unembed(bf)
+            self.params = self._executor.params
+            return
+        if self.cfg.faust_unembed is None or "faust" not in self.params.get(
+            "unembed", {}
+        ):
+            raise ValueError("model has no FAµST unembedding to swap")
+        from repro.layers.faust_linear import blockfaust_to_params
+        from repro.layers.param import split_annotations
+
+        unembed = dict(self.params["unembed"])
+        unembed["faust"], _ = split_annotations(blockfaust_to_params(bf))
+        self.params = {**self.params, "unembed": unembed}
+
     def _executor_for(self, b: int) -> LMExecutor:
         ex = self._executor
         if ex is None or ex.n_slots != b:

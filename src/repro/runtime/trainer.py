@@ -65,6 +65,22 @@ class TrainConfig:
     heartbeat_path: str | None = None
     compression: TopKConfig | None = None
     seed: int = 0
+    # -- in-training recompression (streaming refactorization) ------------
+    # Every `recompress_every` steps, each dense 2-D float param whose
+    # tree path contains one of `recompress_targets` is tracked by a
+    # repro.streaming.online.StreamingFaust: the first hit cold-factorizes
+    # the weight, later hits run warm drift-budgeted updates.  The EF
+    # machinery above compresses the *gradients*; this periodically
+    # refactorizes the *weights* they flow into — the RE-vs-step trace
+    # lands in metrics ("recompress_re") and on the heartbeat JSON, and
+    # the refreshed operators sit in Trainer.streaming ready for a serving
+    # hot-swap (repro.streaming.swap).  0 disables.
+    recompress_every: int = 0
+    # "embed/table" covers tied-embedding models, where the shared table
+    # *is* the unembedding weight.
+    recompress_targets: tuple = ("unembed", "embed/table")
+    recompress_spec: Any = None  # FactorizeSpec override
+    recompress_cfg: Any = None  # StreamingConfig override
 
 
 class TrainState:
@@ -218,6 +234,10 @@ class Trainer:
         # dispatch layer prices fwd+bwd jointly under jax.grad — see
         # repro.api.dispatch); captured after the first step's trace
         self.faust_dispatch = None
+        # streaming recompression trackers, one per matched weight
+        # (populated lazily on the first recompress tick)
+        self.streaming: dict = {}
+        self._recompress_log: dict | None = None
 
     # -- fault-tolerance hooks -------------------------------------------------
     def _install_signal_handlers(self):
@@ -233,8 +253,65 @@ class Trainer:
 
     def _heartbeat(self, step: int):
         if self.tcfg.heartbeat_path:
+            payload: dict = {"step": step, "t": time.time()}
+            if self._recompress_log is not None:
+                payload["recompress"] = self._recompress_log
             with open(self.tcfg.heartbeat_path, "w") as f:
-                f.write(json.dumps({"step": step, "t": time.time()}))
+                f.write(json.dumps(payload))
+
+    # -- in-training recompression -------------------------------------------
+    def _recompress_weights(self, params) -> dict:
+        """Dense 2-D float leaves whose tree path matches a selector."""
+        flat, _ = jax.tree_util.tree_flatten_with_path(params)
+        out = {}
+        for path, leaf in flat:
+            if getattr(leaf, "ndim", 0) != 2:
+                continue
+            if not jnp.issubdtype(leaf.dtype, jnp.floating):
+                continue
+            name = "/".join(
+                str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+            )
+            if any(sub in name for sub in self.tcfg.recompress_targets):
+                out[name] = leaf
+        return out
+
+    def _recompress(self, state, step_idx: int) -> dict:
+        """One recompression tick: warm-update (or start) the streaming
+        tracker of every matched weight; returns {name: record} and stows
+        the RE-vs-step trace for the heartbeat."""
+        from repro.api.factorize import FactorizeSpec
+        from repro.streaming.online import StreamingConfig, StreamingFaust
+
+        records: dict = {}
+        for name, w in self._recompress_weights(state["params"]).items():
+            w32 = w.astype(jnp.float32)
+            sf = self.streaming.get(name)
+            if sf is None:
+                spec = self.tcfg.recompress_spec or FactorizeSpec(
+                    strategy="hierarchical", n_factors=2, block=8,
+                    k_first=4, k_mid=4, n_iter_two=8, n_iter_global=8,
+                )
+                sf = StreamingFaust.track(
+                    w32, spec,
+                    self.tcfg.recompress_cfg
+                    or StreamingConfig(n_iter_update=4),
+                )
+                self.streaming[name] = sf
+                records[name] = {
+                    "action": "init",
+                    "re": sf.estimate_drift(w32),
+                    "sweeps": sf.cold_sweeps,
+                }
+            else:
+                rec = sf.update(w32)
+                records[name] = {
+                    "action": rec.action,
+                    "re": rec.re_est,
+                    "sweeps": rec.sweeps,
+                }
+        self._recompress_log = {"step": step_idx, "weights": records}
+        return records
 
     # -- main loop ---------------------------------------------------------------
     def run(self, resume: bool = True) -> dict:
@@ -280,6 +357,19 @@ class Trainer:
                 )
                 metrics["straggler"] = 1.0
             ewma = 0.9 * (ewma or dt) + 0.1 * dt
+            if (
+                self.tcfg.recompress_every
+                and (step_idx + 1) % self.tcfg.recompress_every == 0
+            ):
+                recs = self._recompress(state, step_idx)
+                if recs:
+                    metrics["recompress_re"] = max(
+                        r["re"] for r in recs.values()
+                    )
+                    log.info(
+                        "recompress @ step %d: %s", step_idx,
+                        {n: round(r["re"], 4) for n, r in recs.items()},
+                    )
             metrics.update(step=step_idx, step_time_s=dt)
             self.history.append(metrics)
             self._heartbeat(step_idx)

@@ -1,0 +1,243 @@
+"""Online PALM4MSA — track a drifting target with warm-started sweeps.
+
+A cold :func:`repro.api.factorize.factorize` pays the full hierarchical
+schedule — ``n_splits · (n_iter_two + n_iter_global)`` PALM sweeps —
+every time the target moves.  :class:`StreamingFaust` instead keeps the
+*last factor state* and, per target snapshot ``A_t``, runs a short
+warm-started global refinement (:func:`repro.core.palm4msa.palm4msa`
+``init_factors=``): PALM's proximal structure makes the previous factors
+a feasible init (every factor came out of a projection), so with
+``init_feasible=True`` + ``keep_best`` each update is no-worse-than-init
+and the cost scales with *drift*, not with matrix size.
+
+Three-way budget controller, decided per step from a cheap sketched
+relative-error estimate (random probes ``‖A_t x − op x‖/‖A_t x‖`` —
+O(s_tot·probes), never materializing the dense operator):
+
+* drift ≤ ``skip_below``    → **skip** (0 sweeps; the op is still good);
+* drift ≥ ``full_above``    → **full** hierarchical refactorization (the
+  support itself has rotted; warm sweeps can't move support across the
+  constraint sets' combinatorial gaps);
+* otherwise                 → **incremental** warm sweep
+  (``n_iter_update`` sweeps on the flat converged-schedule constraints).
+
+Every warm sweep reuses the PR-2 trace cache
+(:func:`repro.core.hierarchical._run_palm` with value-hashable
+``ProjSpec`` schedules): repeated same-shape updates never retrace —
+``StreamingFaust.trace_stats`` proves it.
+
+Sweep accounting (``sweeps_total``, per-record ``sweeps``) is the cost
+unit the drift-tracking acceptance test and
+``benchmarks/streaming_track.py`` budget warm tracking against cold
+refactorization in.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.factorize import (
+    FactorizeSpec,
+    TargetPrep,
+    _finish,
+    _shard_of,
+    factorize,
+)
+from repro.core.compress import BlockFaust
+from repro.core.faust import Faust
+from repro.core.hierarchical import CacheStats, HierarchicalSpec, _run_palm
+
+Array = jax.Array
+
+SKIP, SWEEP, FULL = "skip", "sweep", "full"
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamingConfig:
+    """Budget-controller policy + sketch parameters.
+
+    Defaults suit relative drifts in the percent range (small rotations /
+    sparse perturbations per step); ``full_above`` marks the point where
+    the *support* is assumed stale, not just the values."""
+
+    n_probes: int = 8  # sketch width of the drift estimate
+    skip_below: float = 0.0  # drift ≤ this → skip (0: never skip)
+    full_above: float = 0.5  # drift ≥ this → full refactorization
+    n_iter_update: int = 8  # warm sweeps per incremental update
+    seed: int = 0  # probe PRNG seed (deterministic per step)
+
+
+@dataclasses.dataclass(frozen=True)
+class UpdateRecord:
+    """What one :meth:`StreamingFaust.update` did and what it cost."""
+
+    step: int
+    action: str  # "skip" | "sweep" | "full"
+    drift: float  # pre-update sketched RE vs the published op
+    re_est: float  # post-update sketched RE
+    sweeps: int  # PALM sweeps this update paid
+
+
+class StreamingFaust:
+    """A FAµST operator that tracks a drifting dense target.
+
+    Build with :meth:`track` (cold-factorizes the first snapshot), then
+    feed snapshots to :meth:`update`.  The refreshed operator is
+    ``self.op`` — same structural frame as ``factorize`` would return
+    (block route stays a packed deployment ``BlockFaust``, mesh placement
+    preserved), so it hot-swaps straight into the serving runtime via
+    :func:`repro.streaming.swap.hot_swap`.
+    """
+
+    def __init__(
+        self,
+        spec: FactorizeSpec,
+        cfg: StreamingConfig,
+        faust: Faust,
+        op,
+        hier: HierarchicalSpec,
+        prep: TargetPrep,
+        cold_sweeps: int,
+    ):
+        self.spec, self.cfg = spec, cfg
+        self.faust, self.op = faust, op
+        self.hier, self.prep = hier, prep
+        self.cold_sweeps = cold_sweeps  # one full refactorization's cost
+        self.sweeps_total = cold_sweeps
+        self.trace_stats = CacheStats()  # warm-sweep trace-cache counters
+        self.history: list[UpdateRecord] = []
+        self._step = 0
+        self._block_route = spec.strategy == "hierarchical" and (
+            spec.hier is None and spec.block is not None
+        )
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def track(
+        cls,
+        a0: Array,
+        spec: FactorizeSpec,
+        cfg: StreamingConfig = StreamingConfig(),
+    ) -> "StreamingFaust":
+        """Cold-factorize the first snapshot and start tracking it."""
+        a0 = jnp.asarray(a0)
+        if a0.ndim != 2:
+            raise ValueError(f"StreamingFaust tracks one (m, n) target; got {a0.shape}")
+        if spec.strategy in ("palm4msa", "dictionary"):
+            raise ValueError(
+                "StreamingFaust needs a hierarchical-family strategy (the "
+                "full refactorization fallback and the converged flat "
+                f"constraint schedule come from it); got {spec.strategy!r}"
+            )
+        op, info = factorize(a0, spec)
+        return cls(
+            spec, cfg, info.fausts[0], op, info.hier_spec, info.prep,
+            info.n_sweeps,
+        )
+
+    # -- the flat constraint schedule of the converged state ----------------
+    @property
+    def refine_projs(self) -> tuple:
+        """Per-factor projections of the final global refinement — the
+        constraint sets the converged chain ``[S_1..S_{J-1}, T]`` lives
+        in, and therefore the schedule warm sweeps refine under."""
+        return tuple(self.hier.factor_projs) + (self.hier.resid_projs[-1],)
+
+    # -- drift monitor ------------------------------------------------------
+    def estimate_drift(self, a_t: Array, salt: int = 0) -> float:
+        """Sketched RE ``‖A_t X − op X‖_F / ‖A_t X‖_F`` over
+        ``cfg.n_probes`` Gaussian probe columns — O(s_tot · probes), no
+        dense materialization.  Deterministic: the probe key is derived
+        from ``(cfg.seed, step, salt)``."""
+        a_t = jnp.asarray(a_t)
+        key = jax.random.fold_in(
+            jax.random.PRNGKey(self.cfg.seed), 2 * self._step + salt
+        )
+        x = jax.random.normal(key, (a_t.shape[1], self.cfg.n_probes), a_t.dtype)
+        y_true = a_t @ x
+        y_op = self.op @ x
+        denom = jnp.maximum(jnp.linalg.norm(y_true), 1e-12)
+        return float(jnp.linalg.norm(y_true - y_op) / denom)
+
+    # -- the online update --------------------------------------------------
+    def update(self, a_t: Array) -> UpdateRecord:
+        """Track one target snapshot: probe drift, let the budget
+        controller pick skip / incremental warm sweep / full hierarchical
+        refactorization, refresh ``self.op``, and account the sweeps."""
+        a_t = jnp.asarray(a_t)
+        drift = self.estimate_drift(a_t, salt=0)
+        if drift <= self.cfg.skip_below:
+            action, sweeps = SKIP, 0
+        elif drift >= self.cfg.full_above:
+            action, sweeps = FULL, self._refactorize(a_t)
+        else:
+            action, sweeps = SWEEP, self._warm_sweep(a_t)
+        self.sweeps_total += sweeps
+        re_est = self.estimate_drift(a_t, salt=1)
+        rec = UpdateRecord(self._step, action, drift, re_est, sweeps)
+        self.history.append(rec)
+        self._step += 1
+        return rec
+
+    def _warm_sweep(self, a_t: Array) -> int:
+        """Incremental update: ``n_iter_update`` warm PALM sweeps on the
+        converged flat schedule, started from the current factors.  Runs
+        through the trace cache — same shapes + same ``ProjSpec`` schedule
+        ⇒ the first update's trace serves every later one."""
+        a_p = self.prep.apply(a_t)
+        res = _run_palm(
+            self.trace_stats,
+            a_p,
+            self.faust.factors,
+            self.faust.lam,
+            self.refine_projs,
+            self.cfg.n_iter_update,
+            alpha=self.hier.alpha,
+            power_iters=self.hier.power_iters,
+            init_feasible=True,  # previous factors came out of projections
+        )
+        self._publish(Faust(res.factors, res.lam))
+        return self.cfg.n_iter_update
+
+    def _refactorize(self, a_t: Array) -> int:
+        """Full cold restart — the controller's answer to support rot."""
+        op, info = factorize(a_t, self.spec)
+        self.faust, self.op = info.fausts[0], op
+        self.hier, self.prep = info.hier_spec, info.prep
+        return info.n_sweeps
+
+    def _publish(self, faust: Faust) -> None:
+        """Rebuild ``self.op`` from refreshed factors in the same frame
+        ``factorize`` used (block re-pack + mesh placement included)."""
+        self.faust = faust
+        bfs = None
+        if self._block_route:
+            from repro.core.compress import _faust_to_blockfaust
+
+            bk = self.spec.block
+            in_f = self.op.in_dim
+            out_f = self.op.out_dim
+            bfs = [
+                _faust_to_blockfaust(
+                    faust, self.prep.transpose, bk, bk, in_f, out_f
+                )
+            ]
+        op, _ = _finish(
+            self.spec.strategy, False, [faust], blockfausts=bfs,
+            shard=_shard_of(self.spec),
+        )
+        self.op = op
+
+    # -- convenience --------------------------------------------------------
+    @property
+    def blockfaust(self) -> BlockFaust | None:
+        """Deployment chain of the published op (block route only)."""
+        rep = self.op.rep
+        return rep if isinstance(rep, BlockFaust) else None
+
+    def sweeps_saved(self) -> int:
+        """Sweeps a cold-refactorize-every-step policy would have paid
+        minus what tracking actually paid (the streaming win)."""
+        return self.cold_sweeps * (len(self.history) + 1) - self.sweeps_total

@@ -1,0 +1,165 @@
+"""Atomic operator hot-swap for the serving runtime.
+
+A serving process holds a FAµST unembedding chain inside jitted
+prefill/decode closures (:class:`repro.runtime.engine.LMExecutor`).  The
+streaming tracker (:mod:`repro.streaming.online`) periodically produces a
+refreshed chain for the same projection; this module publishes it into a
+live :class:`~repro.runtime.engine.Engine` / ``Server`` / executor
+*between* decode steps, without breaking in-flight requests:
+
+* **values-only swap** — the refreshed chain keeps the old support
+  (identical ``in_idx``, identical shapes ⇒ identical ``ChainPlan``).
+  Params are per-call arguments of the jitted closures, so the swap is a
+  pure host-side pointer flip: compiled caches, autotune table hits
+  (:func:`repro.api.autotune.key_of` contains no array values), and the
+  dispatch decision all stay valid.  In-flight requests simply see the
+  new values from their next step on — greedy decode of a request
+  admitted *after* the swap is token-exact vs a process that had the
+  refreshed chain from the start (pinned by ``tests/test_swap.py``).
+* **staged re-pack** — the support moved (``in_idx`` values or shapes
+  changed).  The next prefill/decode call with the new shapes retraces
+  (that *is* the staged re-pack: ``pack_chain`` runs against the new
+  support at trace time), the executor's advisory op is rebuilt, and
+  measured autotune entries for the *old* signature are invalidated.
+  When the swap changes ``s_tot`` the old entries die naturally (the key
+  embeds ``s_tot``); when a support change happens to preserve ``s_tot``
+  the timings could silently survive despite e.g. different sharded
+  collective crossings — :func:`repro.api.autotune.invalidate` drops them
+  explicitly.
+
+The swap itself is atomic at the scheduler's granularity: the engine is
+host-driven (``Engine.step()``), so calling :func:`hot_swap` between
+steps is the "between decode steps" point — no step ever sees a
+half-published chain.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compress import BlockFaust
+
+VALUES_ONLY, REPACK = "values_only", "repack"
+
+
+@dataclasses.dataclass(frozen=True)
+class SwapReport:
+    """What one :func:`hot_swap` publication did."""
+
+    kind: str  # "values_only" | "repack"
+    s_tot_before: int
+    s_tot_after: int
+    retrace: bool  # will the next engine step retrace its closures?
+    invalidated: int  # autotune entries explicitly dropped (repack only)
+
+
+def classify_swap(old: BlockFaust, new: BlockFaust) -> str:
+    """``"values_only"`` when the refreshed chain keeps the old support
+    (same shapes, same ``in_idx`` contents — same ``ChainPlan``), else
+    ``"repack"``.  Raises when the chains are not interchangeable behind
+    one serving config (feature dims / chain length fixed by the model's
+    static ``FaustSpec``)."""
+    if len(old.factors) != len(new.factors):
+        raise ValueError(
+            f"hot-swap cannot change chain length ({len(old.factors)} → "
+            f"{len(new.factors)}): the serving FaustSpec is static config"
+        )
+    if (old.in_features, old.out_features) != (
+        new.in_features, new.out_features
+    ):
+        raise ValueError(
+            "hot-swap cannot change operator shape: "
+            f"{(old.in_features, old.out_features)} → "
+            f"{(new.in_features, new.out_features)}"
+        )
+    for fo, fn in zip(old.factors, new.factors):
+        if (fo.in_features, fo.out_features) != (fn.in_features, fn.out_features):
+            raise ValueError(
+                "hot-swap cannot change per-factor feature dims "
+                f"({(fo.in_features, fo.out_features)} → "
+                f"{(fn.in_features, fn.out_features)})"
+            )
+        if fo.in_idx.shape != fn.in_idx.shape:
+            return REPACK  # different k: support (and s_tot) changed
+        if fo.values.shape != fn.values.shape:
+            return REPACK
+        if not np.array_equal(np.asarray(fo.in_idx), np.asarray(fn.in_idx)):
+            return REPACK  # same budget, moved support
+    return VALUES_ONLY
+
+
+def _executor_of(target):
+    """Accept an Engine, a Server, or a bare executor."""
+    ex = getattr(target, "executor", None)  # Engine
+    if ex is not None:
+        return ex
+    if hasattr(target, "swap_unembed"):  # LMExecutor / Server
+        return target
+    raise TypeError(f"cannot hot-swap into {type(target).__name__}")
+
+
+def hot_swap(target, new: BlockFaust) -> SwapReport:
+    """Publish ``new`` as the serving unembedding chain of ``target``
+    (an :class:`~repro.runtime.engine.Engine`,
+    :class:`~repro.runtime.server.Server`, or
+    :class:`~repro.runtime.engine.LMExecutor`).
+
+    Call between engine steps / ``generate()`` calls.  Returns a
+    :class:`SwapReport`; bumps ``EngineStats.swaps`` when the target is an
+    engine."""
+    from repro.api import autotune
+
+    ex = _executor_of(target)
+    old = ex.unembed_blockfaust()
+    if old is None:
+        raise ValueError("target serves no FAµST unembedding chain")
+    kind = classify_swap(old, new)
+    invalidated = 0
+    if kind == REPACK:
+        # Old-signature timings are stale.  s_tot change ⇒ the key moves
+        # and misses naturally; same-s_tot support moves need the explicit
+        # drop.  Invalidate unconditionally on repack — idempotent, and an
+        # s_tot-changing swap just finds nothing left under the old prefix.
+        from repro.api.operator import FaustOp
+
+        invalidated = autotune.invalidate(
+            autotune.op_key_prefix(FaustOp.from_blockfaust(old))
+        )
+    ex.swap_unembed(new)
+    stats = getattr(target, "stats", None)  # Engine-level accounting
+    if stats is not None and hasattr(stats, "swaps"):
+        stats.swaps += 1
+    return SwapReport(
+        kind=kind,
+        s_tot_before=int(old.s_tot),
+        s_tot_after=int(new.s_tot),
+        retrace=kind == REPACK
+        and any(
+            fo.values.shape != fn.values.shape
+            for fo, fn in zip(old.factors, new.factors)
+        ),
+        invalidated=invalidated,
+    )
+
+
+def refreshed_chain(streaming, like: BlockFaust) -> BlockFaust:
+    """Adapt a :class:`~repro.streaming.online.StreamingFaust`'s published
+    chain to a serving chain's λ dtype/shape (the tracker optimizes in
+    f32; serving params may run bf16 values with f32 λ).  Raises when the
+    tracker's op is not a deployment ``BlockFaust`` (use a block-route
+    ``FactorizeSpec`` for serving-bound trackers)."""
+    bf = streaming.blockfaust
+    if bf is None:
+        raise ValueError(
+            "StreamingFaust op is not a deployment BlockFaust; track with "
+            "a block-route FactorizeSpec to feed a serving swap"
+        )
+    factors = tuple(
+        dataclasses.replace(
+            f, values=f.values.astype(lf.values.dtype)
+        )
+        for f, lf in zip(bf.factors, like.factors)
+    )
+    return BlockFaust(factors, jnp.asarray(bf.lam, like.lam.dtype))

@@ -1,0 +1,142 @@
+"""Direct unit tests for gradient compression (repro.optim.compression).
+
+Previously these transforms were only exercised through the trainer; the
+algebraic contracts are pinned here directly:
+  * EF top-k: per step, compressed + residual partition the accumulated
+    gradient exactly (no mass lost), exactly k entries survive, and the
+    telescoping identity Σ compressed + final residual = Σ grads holds;
+  * PowerSGD: rank-r targets reconstruct exactly (projection onto their
+    own column space), generic targets leave residual = G − P Qᵀ, small
+    leaves pass through untouched;
+  * compression_ratio_topk counts communicated floats.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.compression import (
+    PowerSGDConfig,
+    TopKConfig,
+    compression_ratio_topk,
+    ef_topk_compress,
+    ef_topk_init,
+    powersgd_compress,
+    powersgd_init,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _grads(rng, shapes):
+    return {f"w{i}": jnp.asarray(rng.normal(size=s).astype(np.float32))
+            for i, s in enumerate(shapes)}
+
+
+# --- EF top-k ---------------------------------------------------------------
+
+
+def test_ef_topk_partitions_accumulated_gradient():
+    rng = np.random.default_rng(0)
+    cfg = TopKConfig(ratio=0.25)
+    g = _grads(rng, [(8, 8)])
+    state = ef_topk_init(g)
+    comp, state, metrics = ef_topk_compress(cfg, g, state)
+    c, r = np.asarray(comp["w0"]), np.asarray(state.residual["w0"])
+    # compressed + residual = gradient, on disjoint supports
+    np.testing.assert_allclose(c + r, np.asarray(g["w0"]), rtol=1e-6)
+    assert np.all((c == 0) | (r == 0))
+    # exactly k = ceil(64 · 0.25) = 16 survivors, the largest magnitudes
+    assert int((c != 0).sum()) == 16
+    assert np.abs(c[c != 0]).min() >= np.abs(r[r != 0]).max() - 1e-7
+    assert np.isclose(float(metrics["ef_residual_norm"]), np.linalg.norm(r))
+
+
+def test_ef_topk_error_accumulation_telescopes():
+    """Over T steps, Σ compressed + final residual = Σ raw grads — error
+    feedback loses nothing, it only delays."""
+    rng = np.random.default_rng(1)
+    cfg = TopKConfig(ratio=0.1)
+    shapes = [(8, 8), (40,)]
+    state = ef_topk_init(_grads(rng, shapes))
+    total_g = {f"w{i}": np.zeros(s, np.float32) for i, s in enumerate(shapes)}
+    total_c = {f"w{i}": np.zeros(s, np.float32) for i, s in enumerate(shapes)}
+    for _ in range(5):
+        g = _grads(rng, shapes)
+        comp, state, _ = ef_topk_compress(cfg, g, state)
+        for k in total_g:
+            total_g[k] += np.asarray(g[k])
+            total_c[k] += np.asarray(comp[k])
+    for k in total_g:
+        np.testing.assert_allclose(
+            total_c[k] + np.asarray(state.residual[k]), total_g[k],
+            rtol=1e-5, atol=1e-6,
+        )
+
+
+def test_ef_topk_residual_resurfaces():
+    """An entry too small to be kept at step 1 accumulates and wins later
+    — the defining EF behavior."""
+    cfg = TopKConfig(ratio=0.25)  # k=1 of 4 entries
+    g = {"w": jnp.asarray([4.0, 1.5, 0.0, 0.0], jnp.float32)}
+    state = ef_topk_init(g)
+    comp, state, _ = ef_topk_compress(cfg, g, state)
+    assert np.asarray(comp["w"]).tolist() == [4.0, 0.0, 0.0, 0.0]
+    # next step: w[1]'s residual 1.5 + new 1.5 = 3.0 beats new w[0]=2.0
+    g2 = {"w": jnp.asarray([2.0, 1.5, 0.0, 0.0], jnp.float32)}
+    comp2, state, _ = ef_topk_compress(cfg, g2, state)
+    assert np.asarray(comp2["w"]).tolist() == [0.0, 3.0, 0.0, 0.0]
+    assert np.asarray(state.residual["w"]).tolist() == [2.0, 0.0, 0.0, 0.0]
+
+
+def test_compression_ratio_topk():
+    params = {"a": jnp.zeros((10, 10)), "b": jnp.zeros((100,))}
+    # kept = 2·(ceil(100·0.1)) per leaf = 2·10 + 2·10; dense = 200
+    assert np.isclose(compression_ratio_topk(params, TopKConfig(ratio=0.1)), 0.2)
+
+
+# --- PowerSGD ---------------------------------------------------------------
+
+
+def test_powersgd_rank_r_exact_reconstruction():
+    """A gradient already of rank ≤ r is reproduced exactly (up to fp):
+    one power-iteration step projects onto its own column space."""
+    rng = np.random.default_rng(2)
+    cfg = PowerSGDConfig(rank=3, min_dim=4)
+    u = rng.normal(size=(16, 3)).astype(np.float32)
+    v = rng.normal(size=(20, 3)).astype(np.float32)
+    g = {"w": jnp.asarray(u @ v.T)}
+    state = powersgd_init(jax.random.PRNGKey(0), g, cfg)
+    comp, state, _ = powersgd_compress(cfg, g, state)
+    np.testing.assert_allclose(
+        np.asarray(comp["w"]), np.asarray(g["w"]), rtol=1e-4, atol=1e-4
+    )
+    assert float(jnp.abs(state.residual["w"]).max()) < 1e-3
+
+
+def test_powersgd_residual_is_reconstruction_error():
+    rng = np.random.default_rng(3)
+    cfg = PowerSGDConfig(rank=2, min_dim=4)
+    g = {"w": jnp.asarray(rng.normal(size=(12, 12)).astype(np.float32))}
+    state = powersgd_init(jax.random.PRNGKey(1), g, cfg)
+    comp, state, _ = powersgd_compress(cfg, g, state)
+    c, r = np.asarray(comp["w"]), np.asarray(state.residual["w"])
+    np.testing.assert_allclose(c + r, np.asarray(g["w"]), rtol=1e-5, atol=1e-5)
+    # approximation has rank ≤ cfg.rank
+    sv = np.linalg.svd(c, compute_uv=False)
+    assert (sv > 1e-4 * sv[0]).sum() <= cfg.rank
+    # EF: the residual is re-applied on the next step
+    g2 = {"w": jnp.zeros((12, 12), jnp.float32)}
+    comp2, state2, _ = powersgd_compress(cfg, g2, state)
+    np.testing.assert_allclose(
+        np.asarray(comp2["w"]) + np.asarray(state2.residual["w"]), r,
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+def test_powersgd_small_leaves_pass_through():
+    cfg = PowerSGDConfig(rank=2, min_dim=128)  # 8x8 < 128² stays dense
+    g = {"w": jnp.ones((8, 8), jnp.float32), "b": jnp.ones((8,), jnp.float32)}
+    state = powersgd_init(jax.random.PRNGKey(0), g, cfg)
+    comp, state, _ = powersgd_compress(cfg, g, state)
+    np.testing.assert_array_equal(np.asarray(comp["w"]), np.asarray(g["w"]))
+    np.testing.assert_array_equal(np.asarray(comp["b"]), np.asarray(g["b"]))

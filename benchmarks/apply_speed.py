@@ -42,10 +42,30 @@ import numpy as np
 
 from benchmarks.common import emit, timeit_us
 from repro.api import FaustOp, last_report
-from repro.core.compress import BlockFaust, pack_chain, random_block_factor
+from repro.core.compress import (
+    BlockFaust,
+    pack_chain,
+    quantize_chain,
+    random_block_factor,
+)
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
+
+# --dtype axis: f32 is the full benchmark; the low-precision dtypes run a
+# focused fused-path comparison against the f32 fused baseline (bf16 casts
+# the packed values; int8/fp8 quantize them — in-VMEM dequant, see
+# EXPERIMENTS.md §Quantized chains).
+DTYPES = ("f32", "bf16", "int8", "fp8_e4m3")
+
+
+def _bench_dtypes() -> tuple[str, ...]:
+    """Low-precision rows appended to the default f32 run —
+    ``REPRO_BENCH_DTYPES`` (comma list, "" to disable) overrides."""
+    v = os.environ.get("REPRO_BENCH_DTYPES")
+    if v is None:
+        return ("int8", "fp8_e4m3")
+    return tuple(t for t in (s.strip() for s in v.split(",")) if t)
 
 
 def count_pallas_calls(fn, *args) -> int:
@@ -60,10 +80,17 @@ def _rel(a, b) -> float:
 
 
 def run(cases=((1024, 4096, 2, 4, 128), (2048, 8192, 2, 4, 128), (2048, 8192, 3, 4, 128)),
-        batch: int = 128) -> None:
+        batch: int = 128, dtype: str = "f32") -> None:
+    if dtype not in DTYPES:
+        raise ValueError(f"--dtype must be one of {DTYPES}; got {dtype!r}")
     on_tpu = jax.default_backend() == "tpu"
     use_kernel = True  # interpret-mode emulation off-TPU
     interpret = not on_tpu
+    if dtype != "f32":  # focused low-precision run: fused path vs f32 fused
+        for case in cases:
+            bf, _ = _chain_case(*case)
+            _lowprec_row(bf, case, batch, dtype, use_kernel, interpret)
+        return
     for in_dim, out_dim, n_factors, blocks_k, block in cases:
         bf, dims = _chain_case(in_dim, out_dim, n_factors, blocks_k, block)
         op = FaustOp.from_blockfaust(bf)
@@ -136,9 +163,70 @@ def run(cases=((1024, 4096, 2, 4, 128), (2048, 8192, 2, 4, 128), (2048, 8192, 3,
             f"dispatch_source={report.source};parity={parity:.1e};"
             f"tpu_roofline_gain={t_tpu_dense / t_tpu_fused:.2f};"
             f"tpu_fuse_gain={t_tpu_perfac / t_tpu_fused:.2f};"
+            f"values_dtype=float32;weight_bytes={4 * op.s_tot};"
             f"interpret={int(interpret)}",
             dispatch=report,
         )
+        for qd in _bench_dtypes():
+            _lowprec_row(
+                bf, (in_dim, out_dim, n_factors, blocks_k, block), batch,
+                qd, use_kernel, interpret, t_f32=t_fused, y_f32=y_fused,
+            )
+
+
+def _lowprec_row(
+    bf, case, batch, dtype, use_kernel, interpret, t_f32=None, y_f32=None
+):
+    """One ``apply_{m}x{n}_J{J}_{dtype}`` row: the fused path at a
+    low-precision values dtype vs the f32 fused baseline — measured µs
+    (interpret-mode emulation off-TPU; the dispatch estimate carries the
+    TPU story), post-quantization weight bytes, and the RE paid for them."""
+    in_dim, out_dim, n_factors, _, _ = case
+    chain = pack_chain(bf)
+    if dtype == "bf16":
+        lp = dataclasses.replace(chain, values=chain.values.astype(jnp.bfloat16))
+    else:
+        lp = quantize_chain(chain, dtype)
+    op = FaustOp.from_packed(lp)
+    op_f = FaustOp.from_packed(chain)
+    x = jax.random.normal(jax.random.PRNGKey(1), (batch, in_dim))
+    fn = jax.jit(
+        lambda v: op.apply(v, backend="fused", use_kernel=use_kernel,
+                           interpret=interpret)
+    )
+    y = fn(x)
+    if y_f32 is None:
+        f32_fn = jax.jit(
+            lambda v: op_f.apply(v, backend="fused", use_kernel=use_kernel,
+                                 interpret=interpret)
+        )
+        y_f32, t_f32 = f32_fn(x), timeit_us(f32_fn, x)
+    re = _rel(y, y_f32)
+    t = timeit_us(fn, x)
+    report = op.dispatch_for(batch)  # auto decision at the quantized bytes
+    wb = lp.weight_bytes  # itemsize-aware: 2·s_tot bf16, s_tot+scales int8
+    emit(
+        f"apply_{in_dim}x{out_dim}_J{n_factors}_{dtype}",
+        t,
+        f"fused_f32_us={t_f32:.1f};speedup_vs_f32={t_f32 / max(t, 1e-9):.2f};"
+        f"re_vs_f32={re:.2e};values_dtype={dtype};weight_bytes={wb};"
+        f"f32_weight_bytes={4 * op.s_tot};"
+        f"bytes_ratio={wb / (4 * op.s_tot):.3f};"
+        f"auto_backend={report.backend};est_speedup_vs_f32="
+        f"{_est_gain(op_f, op, batch):.2f};"
+        f"interpret={int(interpret)}",
+        dispatch=report,
+    )
+
+
+def _est_gain(op_f32, op_lp, batch) -> float:
+    """Dispatch-estimated fwd µs ratio f32/low-precision at the auto pick
+    — the deterministic roofline headline the measured interpret-mode µs
+    can't carry off-TPU."""
+    rf = op_f32.dispatch_for(batch)
+    rl = op_lp.dispatch_for(batch)
+    lo = rl.est_us.get(rl.backend, 0.0)
+    return rf.est_us.get(rf.backend, 0.0) / lo if lo else 0.0
 
 
 def _chain_case(in_dim, out_dim, n_factors, blocks_k, block):
@@ -312,5 +400,10 @@ if __name__ == "__main__":
         "--grad", action="store_true",
         help="run the training-path (fwd+bwd) benchmark instead",
     )
+    ap.add_argument(
+        "--dtype", choices=DTYPES, default="f32",
+        help="values dtype axis: f32 = full benchmark (+low-precision "
+        "rows per REPRO_BENCH_DTYPES); others = focused fused-path run",
+    )
     args = ap.parse_args()
-    run_grad() if args.grad else run()
+    run_grad() if args.grad else run(dtype=args.dtype)

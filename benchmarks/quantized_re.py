@@ -1,0 +1,125 @@
+"""Quantized-chain quality gate: RE degradation vs f32 on paper workloads.
+
+The quantized packed chain (``repro.core.compress.quantize_chain``; int8 /
+fp8 block values with in-VMEM dequant, EXPERIMENTS.md §Quantized chains)
+halves or quarters the weight-stream bytes the dispatch roofline prices —
+but only if the approximation quality the paper measures survives the
+rounding.  This benchmark gates that the paper's way: take the FAµST
+approximation of each of the three reference workloads — the Hadamard
+transform (§IV-C), the MEG-like leadfield (§V-A), the denoising
+dictionary (§VI-C) — quantize its chain at every supported values dtype,
+and report the relative-Frobenius-error increase ΔRE = RE(quantized) −
+RE(f32) against the *dense target*, next to the byte savings paid for it.
+
+Rows are accuracy-only (``us_per_call=0.0``); the gate is the committed
+:data:`THRESHOLDS` — a dtype whose ΔRE exceeds its threshold on any
+workload fails the run (and hence the bench CI leg).  Thresholds are set
+from the measured degradation with ~2× headroom, so they catch a
+quantizer regression, not workload noise.  Measured worst case across the
+three workloads (Hadamard is the hardest — its exact factorization has
+RE_f32 ≈ 2e-6, so the quantization noise is the whole error): int8
+3.3e-3, e4m3 4.7e-2, e5m2 6.5e-2; MEG/denoising land 1–2 orders lower
+because quantization noise hides under the f32 approximation error.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, piecewise_smooth_image, synthetic_leadfield
+from repro.api import FactorizeSpec, FaustOp, factorize
+from repro.core.compress import quantize_chain
+
+# ΔRE = RE(quantized) − RE(f32), relative Frobenius vs the dense target.
+# Committed gate values (see module docstring for the measured baselines).
+THRESHOLDS = {
+    "int8": 8e-3,
+    "fp8_e4m3": 1e-1,
+    "fp8_e5m2": 1.5e-1,
+}
+DTYPES = tuple(THRESHOLDS)
+
+
+def _hadamard_case():
+    from repro.core import hadamard_matrix
+
+    a = hadamard_matrix(32)
+    op, _ = factorize(
+        a, FactorizeSpec(strategy="hadamard", n_iter_two=30, n_iter_global=30)
+    )
+    return "hadamard32", a, op.to("packed", block=8)
+
+
+def _meg_case():
+    from repro.core import hierarchical_factorization, meg_style_spec
+
+    m, n = 102, 512
+    a = synthetic_leadfield(m, n)
+    spec = meg_style_spec(
+        m, n, n_factors=4, k=10, s=4 * m, n_iter_two=15, n_iter_global=15
+    )
+    faust, _ = hierarchical_factorization(a, spec)
+    return "meg", a, FaustOp.wrap(faust).to("packed", block=16)
+
+
+def _denoise_case():
+    import jax
+
+    from benchmarks.denoising import faust_dictionary_spec
+    from repro.core.dictionary import extract_patches, learn_dictionary_mod, omp
+    from repro.core.hierarchical import hierarchical_dictionary
+
+    patch, n_atoms = 8, 128
+    m = patch * patch
+    img = piecewise_smooth_image(64, seed=0)
+    rng = np.random.default_rng(0)
+    noisy = img + 30.0 * jnp.asarray(rng.standard_normal(img.shape), jnp.float32)
+    patches = extract_patches(noisy, patch, stride=2)
+    sel = rng.choice(patches.shape[1], min(500, patches.shape[1]), replace=False)
+    y = patches[:, sel]
+    y = y - jnp.mean(y, axis=0, keepdims=True)
+    d_ddl, _ = learn_dictionary_mod(
+        y, n_atoms, k=5, n_iter=5, key=jax.random.PRNGKey(0)
+    )
+    gamma0 = omp(y, d_ddl, k=5)
+    spec = faust_dictionary_spec(m, n_atoms, n_factors=3, k=4, n_iter=10)
+    faust, _, _ = hierarchical_dictionary(
+        y, d_ddl, gamma0, spec, sparse_coding=lambda yy, dd: omp(yy, dd, k=5)
+    )
+    return "denoise_dict", d_ddl, FaustOp.wrap(faust).to("packed", block=8)
+
+
+def run(dtypes=DTYPES) -> None:
+    for build in (_hadamard_case, _meg_case, _denoise_case):
+        name, a, op = build()
+        chain = op.rep
+        re_f32 = float(op.rel_error_fro(a))
+        breaches = []
+        for dt in dtypes:
+            qc = quantize_chain(chain, dt)
+            qop = FaustOp.from_packed(qc)
+            re_q = float(qop.rel_error_fro(a))
+            dre = re_q - re_f32
+            thr = THRESHOLDS[dt]
+            emit(
+                f"quantre_{name}_{dt}",
+                0.0,  # accuracy-only row (excluded from timing regression)
+                f"RE_f32={re_f32:.4e};RE_q={re_q:.4e};dRE={dre:.4e};"
+                f"threshold={thr:.1e};values_dtype={dt};"
+                f"weight_bytes={qc.weight_bytes};"
+                f"f32_weight_bytes={4 * op.s_tot};"
+                f"bytes_ratio={qc.weight_bytes / (4 * op.s_tot):.3f}",
+            )
+            if dre > thr:
+                breaches.append((name, dt, dre, thr))
+        if breaches:
+            raise RuntimeError(
+                "quantized RE gate breached: "
+                + "; ".join(
+                    f"{n}/{d}: dRE={v:.3e} > {t:.1e}" for n, d, v, t in breaches
+                )
+            )
+
+
+if __name__ == "__main__":
+    run()

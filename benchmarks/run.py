@@ -35,6 +35,10 @@ tracked across PRs, e.g.::
                         warm StreamingFaust tracking vs cold per-snapshot
                         refactorization — RE-vs-updates and sweeps/us per
                         update (EXPERIMENTS.md §Streaming factorization)
+  quantized_re        — int8/fp8 chain quantization quality gate: ΔRE vs
+                        f32 on the Hadamard / MEG / denoising workloads
+                        against committed thresholds
+                        (EXPERIMENTS.md §Quantized chains)
 """
 from __future__ import annotations
 
@@ -84,6 +88,7 @@ def main() -> None:
         denoising,
         hadamard,
         meg_tradeoff,
+        quantized_re,
         serve_load,
         shard_scaling,
         source_localization,
@@ -103,6 +108,7 @@ def main() -> None:
         "shard_scaling": shard_scaling.run,
         "serve_load": serve_load.run,
         "streaming_track": streaming_track.run,
+        "quantized_re": quantized_re.run,
     }
     names = args.only.split(",") if args.only else list(table)
     print("name,us_per_call,derived")

@@ -6,8 +6,10 @@ Compares a fresh ``benchmarks/run.py --json`` output against
 both whose measured ``us_per_call`` regressed by more than the threshold
 (default 25% relative) fails the check, listing the offenders.  Rows are
 matched by ``name``; rows missing from either side are ignored (new
-benchmarks don't fail, retired ones don't block), as are accuracy-only
-rows (``us_per_call == 0``).
+benchmarks don't fail, retired ones don't block).  Accuracy-only rows
+(``us_per_call == 0.0``) are excluded from the timing math outright and
+the exclusion is reported — this is independent of ``--min-us``, which
+only floors *timed* rows.
 
 Rows faster than ``--min-us`` (default 100 ms) in the *baseline* are
 reported but not gated: on a shared CPU host, sub-100ms XLA timings swing
@@ -34,14 +36,26 @@ import sys
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def load_rows(path: str) -> dict[str, float]:
+def load_rows(path: str) -> tuple[dict[str, float], int]:
+    """``(timing_rows, n_accuracy_only)`` from one ``--json`` file.
+
+    Accuracy-only rows (``us_per_call == 0.0`` — RE gates, parity checks,
+    the quantized-RE rows) are excluded from the regression math *here*,
+    explicitly and unconditionally: they are not timings, so no
+    ``--min-us`` setting can pull them into the gate.  The count is
+    returned so :func:`main` reports the exclusion instead of silently
+    shrinking the row set."""
     with open(path, encoding="utf-8") as f:
         rows = json.load(f)
-    return {
-        r["name"]: float(r["us_per_call"])
-        for r in rows
-        if float(r.get("us_per_call", 0)) > 0
-    }
+    timing: dict[str, float] = {}
+    n_zero = 0
+    for r in rows:
+        us = float(r.get("us_per_call", 0))
+        if us > 0:
+            timing[r["name"]] = us
+        else:
+            n_zero += 1
+    return timing, n_zero
 
 
 def main(argv: list[str] | None = None) -> int:
@@ -54,8 +68,14 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--min-us", type=float, default=100_000.0)
     args = ap.parse_args(argv)
 
-    base = load_rows(args.baseline)
-    new = load_rows(args.new)
+    base, base_zero = load_rows(args.baseline)
+    new, new_zero = load_rows(args.new)
+    if base_zero or new_zero:
+        print(
+            f"check_bench: excluded {new_zero} accuracy-only rows "
+            f"(us_per_call == 0.0) from the timing gate "
+            f"({base_zero} in baseline)"
+        )
     shared = sorted(set(base) & set(new))
     if not shared:
         print("check_bench: no comparable rows (nothing to gate)")

@@ -178,4 +178,60 @@ then
 fi
 rm -f "$at_table"
 echo "ci: autotune smoke leg OK"
+
+# Quantization smoke leg: quantize a small chain, assert fwd/bwd parity
+# vs the dequantized-f32 apply and that dispatch prices the reduced byte
+# term — the full matrix is tests/test_quantized_chain.py; this leg
+# proves the quantize → apply → grad → dispatch workflow end to end
+# under the same pinned-model environment as the other legs.
+if ! PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} REPRO_ROOFLINE=builtin \
+    REPRO_AUTOTUNE=off timeout "$CI_TIMEOUT" \
+    python - <<'EOF'
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from repro.api import FaustOp
+from repro.core.compress import (
+    BlockFaust, dequantize_chain, pack_chain, quantize_chain,
+    random_block_factor,
+)
+from repro.kernels.ops import packed_chain_apply
+
+ks = jax.random.split(jax.random.PRNGKey(0), 2)
+bf = BlockFaust(tuple(
+    random_block_factor(ks[i], 64, 64, 8, 8, 2) for i in range(2)),
+    jnp.asarray(1.0))
+pc = pack_chain(bf)
+x = jax.random.normal(jax.random.PRNGKey(1), (16, 64))
+for dt in ("int8", "fp8_e4m3"):
+    qc = quantize_chain(pc, dt)
+    fc = dequantize_chain(qc)
+    y_q = packed_chain_apply(x, qc, use_kernel=True, bt=8, interpret=True)
+    y_f = packed_chain_apply(x, fc, use_kernel=True, bt=8, interpret=True)
+    err = float(jnp.abs(y_q - y_f).max())
+    assert err <= 1e-5, (dt, "fwd", err)
+    def loss(xx, scl, q=qc):
+        y = packed_chain_apply(xx, dataclasses.replace(q, scales=scl),
+                               use_kernel=True, bt=8, interpret=True)
+        return jnp.sum(y ** 2)
+    gx, gs = jax.grad(loss, (0, 1))(x, qc.scales)
+    gx_r, gs_r = jax.grad(
+        lambda xx, scl: jnp.sum(packed_chain_apply(
+            xx, dataclasses.replace(qc, scales=scl), use_kernel=False) ** 2),
+        (0, 1))(x, qc.scales)
+    for g, gr, tag in ((gx, gx_r, "dx"), (gs, gs_r, "dscales")):
+        rel = float(jnp.linalg.norm(g - gr) /
+                    jnp.maximum(jnp.linalg.norm(gr), 1e-30))
+        assert rel <= 1e-5, (dt, tag, rel)
+    rq = FaustOp.from_packed(qc).dispatch_for(16)
+    rf = FaustOp.from_packed(pc).dispatch_for(16)
+    assert rq.values_dtype == {"int8": "int8", "fp8_e4m3": "float8_e4m3fn"}[dt]
+    assert rq.weight_bytes == qc.weight_bytes < rf.weight_bytes
+    assert f"weight_bytes={rq.weight_bytes}" in rq.reason
+print("quantization smoke: fwd/bwd parity + reduced byte pricing OK")
+EOF
+then
+    echo "ci: QUANTIZATION SMOKE FAILED"
+    exit 1
+fi
+echo "ci: quantization smoke leg OK"
 exit "$status"

@@ -144,18 +144,26 @@ def key_of(
     grad: bool,
     mesh_shape: tuple | None,
     device: str,
+    vq: str | None = None,
 ) -> str:
     """The dispatch-key string a timing is filed under.  Everything the
     cost model's decision depends on, batch bucketed (see module
-    docstring), plus the device — measured µs are host timings."""
+    docstring), plus the device — measured µs are host timings.
+
+    ``vq`` is the quantization scheme of a quantized packed leaf (e.g.
+    ``"int8:per_block"``); it appends a ``|vq:...`` component so quantized
+    and f32 variants of the same signature never share measured timings.
+    Unquantized keys stay byte-identical to what they were before
+    quantization existed — old tables keep hitting."""
     mesh = (
         "x".join(f"{a}{s}" for a, s in mesh_shape) if mesh_shape else "-"
     )
     kind = "grad" if grad else "fwd"
-    return (
+    base = (
         f"{shape[0]}x{shape[1]}|J{n_factors}|s{s_tot}"
         f"|b{bucket_batch(batch)}|{dtype}|{kind}|mesh:{mesh}|{device}"
     )
+    return f"{base}|vq:{vq}" if vq else base
 
 
 def lookup(key: str) -> dict | None:
@@ -216,6 +224,7 @@ def key_for_op(op, *, batch: int, dtype, grad: bool, mesh_shape) -> str:
         grad=grad,
         mesh_shape=mesh_shape,
         device=jax.default_backend(),
+        vq=getattr(getattr(op, "rep", None), "qscheme", None),
     )
 
 

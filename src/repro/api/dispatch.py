@@ -113,6 +113,13 @@ class DispatchReport:
     # the chain kernels' batch tile this decision priced/selected
     # (caller-forced > autotuned winner > DEFAULT_BT)
     bt: int = DEFAULT_BT
+    # the weight-stream bytes the structured backends were priced at:
+    # values bytes (post-quantization — 1 byte/value for int8/fp8 payloads)
+    # plus scale bytes.  f32 operators: elt·s_tot.
+    weight_bytes: int = 0
+    # dtype of the stored block values ("int8"/"float8_e4m3fn"/... when the
+    # chain is quantized; the activation dtype otherwise)
+    values_dtype: str = ""
 
     def as_row(self) -> dict:
         """Flat JSON-ready form for benchmark rows."""
@@ -130,6 +137,8 @@ class DispatchReport:
             "roofline": self.roofline,
             "source": self.source,
             "bt": self.bt,
+            "weight_bytes": self.weight_bytes,
+            "values_dtype": self.values_dtype,
         }
         if self.mesh_shape is not None:
             row["mesh_shape"] = {a: s for a, s in self.mesh_shape}
@@ -165,8 +174,17 @@ def choose_backend(
     shard: dict | None = None,
     grad: bool = False,
     bt: int = DEFAULT_BT,
+    values_dtype: str | None = None,
+    scales_bytes: int = 0,
 ) -> DispatchReport:
     """Pick the cheapest feasible backend under the roofline model.
+
+    ``values_dtype``/``scales_bytes`` describe a quantized chain payload
+    (int8/fp8 stored values + per-block f32 scales): the structured
+    backends' weight-stream byte term then prices at the stored itemsize
+    plus the scale bytes — honestly, scales included — while the edge /
+    activation terms stay in the compute dtype.  Unquantized operators
+    (``values_dtype=None``) price bit-for-bit as before.
 
     Pure function of its arguments (device is recorded, not consulted):
     the same operator/batch always dispatches the same way, so benchmark
@@ -202,6 +220,17 @@ def choose_backend(
 
     edge = b * (m + n)
     inner = 2 * b * sum(inner_dims)
+    # weight-stream bytes of one pass over the stored values: quantized
+    # payloads stream 1-byte codes + their f32 scale rows, f32 chains
+    # stream elt·s_tot — the term the fused kernel is bound by at small
+    # batch, and the one quantization shrinks.
+    quant = values_dtype is not None
+    w_elt = jnp.dtype(values_dtype).itemsize if quant else elt
+    w_stream = w_elt * s_tot + scales_bytes
+    # the wgrad dvalues slab is written f32 for quantized payloads (the
+    # cotangent is wrt the dequantized values); elt-sized otherwise —
+    # keeping the unquantized formulas bit-identical
+    dv_bytes = 4.0 * s_tot if quant else elt * s_tot
     # dense = build the matrix (chain product: ~2·s_tot·min(m,n) flops over
     # J−1 launches, m·n written then re-read) + one dense matmul
     build_flops = 2.0 * s_tot * min(m, n)
@@ -213,9 +242,9 @@ def choose_backend(
                 n_factors,
             ),
             "bsr": roofline_us(
-                2.0 * b * s_tot, elt * (s_tot + edge + inner), n_factors
+                2.0 * b * s_tot, w_stream + elt * (edge + inner), n_factors
             ),
-            "fused": roofline_us(2.0 * b * s_tot, elt * (s_tot + edge), 1),
+            "fused": roofline_us(2.0 * b * s_tot, w_stream + elt * edge, 1),
         }
     else:
         # joint fwd+bwd pricing — three passes per apply, both structured
@@ -244,19 +273,20 @@ def choose_backend(
             ),
             "bsr": roofline_us(
                 3 * 2.0 * b * s_tot,
-                elt * (4 * s_tot + 3 * edge + 3 * inner),
+                3 * w_stream + dv_bytes + elt * (3 * edge + 3 * inner),
                 3 * n_factors,
             ),
             "fused": roofline_us(
                 5 * 2.0 * b * s_tot,
-                elt * (4 * s_tot + 3 * edge) + wgrad_spill,
+                3 * w_stream + dv_bytes + elt * 3 * edge + wgrad_spill,
                 3,
             ),
         }
     coll_bytes = 0
     if shard is not None and "fused_sharded" in feasible:
         est["fused_sharded"], coll_bytes = _sharded_est(
-            roofline_us, b, m, n, s_tot, elt, shard, inner_dims, grad, bt
+            roofline_us, b, m, n, s_tot, elt, shard, inner_dims, grad, bt,
+            w_elt=w_elt, scales_bytes=scales_bytes, quant=quant,
         )
     est = {k: v for k, v in est.items() if k in feasible}
     backend = min(est, key=lambda k: (est[k], _ORDER[k]))
@@ -265,14 +295,16 @@ def choose_backend(
         key=lambda k: (est[k], _ORDER[k]),
         default=None,
     )
+    weight_bytes = int(w_stream)
     if runner_up is None:
-        reason = f"only feasible backend ({backend})"
+        reason = f"only feasible backend ({backend}); weight_bytes={weight_bytes}"
     else:
         reason = (
             f"{backend} modeled {est[backend]:.2f}us"
             f"{' fwd+bwd' if grad else ''} vs "
             f"{runner_up} {est[runner_up]:.2f}us "
-            f"(batch={b}, s_tot={s_tot}, dense_nnz={m * n})"
+            f"(batch={b}, s_tot={s_tot}, dense_nnz={m * n}, "
+            f"weight_bytes={weight_bytes})"
         )
     if shard is not None and "fused_sharded" in est:
         reason += (
@@ -296,6 +328,10 @@ def choose_backend(
         grad=grad,
         roofline=roofline_src,
         bt=bt,
+        weight_bytes=weight_bytes,
+        values_dtype=(
+            jnp.dtype(values_dtype).name if quant else jnp.dtype(dtype).name
+        ),
     )
 
 
@@ -304,6 +340,9 @@ def _sharded_est(
     inner_dims: tuple[int, ...] = (),
     grad: bool = False,
     bt: int = DEFAULT_BT,
+    w_elt: int | None = None,
+    scales_bytes: int = 0,
+    quant: bool = False,
 ) -> tuple[float, int]:
     """Model the sharded fused apply: per-shard roofline + ICI collectives.
 
@@ -332,36 +371,50 @@ def _sharded_est(
     n_model = max(int(shard.get("n_model", 1)), 1)
     n_data = max(int(shard.get("n_data", 1)), 1)
     launches = int(shard.get("n_segments", 1))
+    if w_elt is None:
+        w_elt = elt
     if shard.get("mode") == "model":
         b_loc = -(-b // n_data)
+        s_loc = s_tot / n_model
         cross = tuple(shard.get("crossing_feats", ()))
         coll_bytes = ici_bytes(b, elt, n_data, n_model, cross)
         boundary_hbm = elt * b_loc * sum(w * (1 + 1 / n_model) for w in cross)
-        flops = 2.0 * b_loc * s_tot / n_model
-        byts = (
-            elt * (s_tot / n_model + b_loc * (m + n / n_model)) + boundary_hbm
-        )
+        flops = 2.0 * b_loc * s_loc
+        # per-shard weight stream: quantized shards move 1-byte codes + their
+        # slice of the scale rows — the same n_model-fold split either way
+        w_loc = w_elt * s_loc + scales_bytes / n_model
+        byts = w_loc + elt * b_loc * (m + n / n_model) + boundary_hbm
     else:
         b_loc = -(-b // (n_data * n_model))
+        s_loc = float(s_tot)
         coll_bytes = 0
         flops = 2.0 * b_loc * s_tot
-        byts = elt * (s_tot + b_loc * (m + n))
+        w_loc = w_elt * s_loc + scales_bytes
+        byts = w_loc + elt * b_loc * (m + n)
         if not shard.get("fusable", True):
             # per-factor reference fallback: every boundary activation
             # round-trips through HBM, one launch per factor
             byts += elt * 2 * b_loc * sum(inner_dims)
     if grad:
+        dv_loc = 4.0 * s_loc if quant else w_loc
         if shard.get("mode") != "model" and not shard.get("fusable", True):
             # the non-fusable fallback differentiates through the
             # per-factor XLA walk, not the chain_bwd kernels — price its
             # backward like bsr (3 passes re-paying the fwd traffic, a
             # dvalues write, no fused recompute or spill)
             flops = 3.0 * flops
-            byts = 3.0 * byts + elt * s_tot
+            byts = 3.0 * byts + (4.0 * s_tot if quant else elt * s_tot)
         else:
-            s_loc = s_tot / n_model if shard.get("mode") == "model" else s_tot
             flops = 5.0 * flops  # fwd + dgrad + wgrad's recompute/walk/emit
-            byts = 4.0 * byts + _wgrad_spill_bytes(b_loc, s_loc, bt)
+            # 3 weight streams (fwd+dgrad+wgrad) + the f32 dvalues slab +
+            # 4 passes over the activation/boundary traffic + tile spill —
+            # collapses to the historical 4·byts for unquantized chains
+            byts = (
+                3.0 * w_loc
+                + dv_loc
+                + 4.0 * (byts - w_loc)
+                + _wgrad_spill_bytes(b_loc, s_loc, bt)
+            )
         launches = 3 * launches
         coll_est = 3 * coll_bytes
     else:
@@ -421,6 +474,7 @@ def dispatch(
     eff_bt = bt if bt is not None else (
         int(entry["bt"]) if entry is not None and entry.get("bt") else DEFAULT_BT
     )
+    values_dtype, scales_bytes = op.quant_info()
     report = choose_backend(
         batch=batch,
         shape=op.shape,
@@ -433,6 +487,8 @@ def dispatch(
         shard=shard,
         grad=grad,
         bt=eff_bt,
+        values_dtype=values_dtype,
+        scales_bytes=scales_bytes,
     )
     if entry is not None:
         measured = {
@@ -459,7 +515,8 @@ def dispatch(
                 reason=(
                     f"measured table hit: {backend} "
                     f"{measured[backend]:.2f}us{vs} "
-                    f"(model would pick {report.backend})"
+                    f"(model would pick {report.backend}; "
+                    f"weight_bytes={report.weight_bytes})"
                 ),
             )
     if requested != "auto":

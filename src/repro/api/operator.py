@@ -52,6 +52,7 @@ from repro.core.compress import (
     BlockFaust,
     PackedChain,
     _faust_to_blockfaust,
+    expand_scales,
     pack_chain,
     unpack_chain,
 )
@@ -141,6 +142,44 @@ def _cached_unpack(pc: PackedChain) -> BlockFaust:
 
 
 _UNPACK_CACHE: dict[int, tuple] = {}
+
+
+def _cached_unpack_raw(pc: PackedChain) -> BlockFaust:
+    """Unpack a *quantized* chain keeping the int8/fp8 codes in the factor
+    values (``dequantize=False``) — the sharded path dequantizes in-kernel
+    against the separately-threaded scales, so handing it f32 factors would
+    double the weight bytes it exists to halve."""
+    if not jax.core.trace_state_clean() or isinstance(
+        pc.values, jax.core.Tracer
+    ):
+        return unpack_chain(pc, dequantize=False)
+    import weakref
+
+    ent = _UNPACK_RAW_CACHE.get(id(pc))
+    if ent is not None and ent[0]() is pc:
+        return ent[1]
+    bf = unpack_chain(pc, dequantize=False)
+    if len(_UNPACK_RAW_CACHE) >= _PACK_CACHE_MAX:
+        _UNPACK_RAW_CACHE.pop(next(iter(_UNPACK_RAW_CACHE)))
+    _UNPACK_RAW_CACHE[id(pc)] = (weakref.ref(pc), bf)
+    return bf
+
+
+_UNPACK_RAW_CACHE: dict[int, tuple] = {}
+
+
+def _shard_view(rep) -> tuple[BlockFaust, "Array | None"]:
+    """BlockFaust view of a leaf rep for the sharded path, plus the flat
+    ``(S, blk)`` f32 scales to thread through ``sharded_chain_apply`` when
+    the rep is a quantized :class:`PackedChain` (``None`` otherwise)."""
+    if isinstance(rep, BlockFaust):
+        return rep, None
+    if rep.qscheme is not None:
+        return (
+            _cached_unpack_raw(rep),
+            expand_scales(rep.scales, rep.plan.block),
+        )
+    return _cached_unpack(rep), None
 
 
 def _under_ad(*trees) -> bool:
@@ -514,7 +553,7 @@ class FaustOp:
         # would run (collective bytes, segment count) and records the mesh.
         # Only when the sharded path can actually be chosen — a forced
         # non-sharded backend must not pay unpack/planning per call.
-        shard_plan, bf_sharded = None, None
+        shard_plan, bf_sharded, shard_scales = None, None, None
         if (
             self.shard is not None
             and backend in ("auto", "fused_sharded")
@@ -522,7 +561,7 @@ class FaustOp:
         ):
             from repro.kernels import chain_sharded as _cs
 
-            bf_sharded = rep if isinstance(rep, BlockFaust) else _cached_unpack(rep)
+            bf_sharded, shard_scales = _shard_view(rep)
             shard_plan = _cs.plan_shard(
                 bf_sharded, self.shard.mesh,
                 self.shard.data_axis, self.shard.model_axis,
@@ -556,7 +595,7 @@ class FaustOp:
                 x, bf_sharded, self.shard.mesh,
                 self.shard.data_axis, self.shard.model_axis,
                 plan=shard_plan, use_kernel=use_kernel, bt=bt,
-                interpret=interpret,
+                interpret=interpret, scales=shard_scales,
             )
         if backend == "dense":
             return x @ self.todense()
@@ -604,6 +643,23 @@ class FaustOp:
             return ("dense", "bsr", "fused") + sharded
         return ("dense", "bsr") + sharded
 
+    def quant_info(self) -> tuple[str | None, int]:
+        """``(values_dtype, scales_bytes)`` for the dispatch byte model: the
+        stored-value dtype name of a quantized packed leaf plus the byte
+        count of its f32 scale sidecar, or ``(None, 0)`` for everything
+        else (f32 leaves, composites — their leaves dispatch individually).
+        Shape-only, so safe under jit tracing."""
+        if (
+            self.kind == "leaf"
+            and isinstance(self.rep, PackedChain)
+            and self.rep.qscheme is not None
+        ):
+            return (
+                jnp.dtype(self.rep.values.dtype).name,
+                int(self.rep.scales.size) * 4,
+            )
+        return None, 0
+
     def inner_dims(self) -> tuple[int, ...]:
         """Intermediate activation widths along the chain (the per-factor
         path round-trips ``2·batch·Σ inner_dims`` elements through HBM)."""
@@ -643,7 +699,7 @@ class FaustOp:
             from repro.kernels import chain_sharded as _cs
 
             rep = _conj_rep(self.rep) if self.conj else self.rep
-            bf = rep if isinstance(rep, BlockFaust) else _cached_unpack(rep)
+            bf, _ = _shard_view(rep)
             shard_summary = _cs.plan_shard(
                 bf, self.shard.mesh, self.shard.data_axis,
                 self.shard.model_axis,

@@ -241,18 +241,119 @@ class PackedChain:
     (pytree aux), so a ``PackedChain`` jits/vmaps like any array pytree.
     """
 
-    values: Array  # (S, block, block)
+    values: Array  # (S, block, block) — f32/bf16, or int8/fp8 when quantized
     in_idx: Array  # (S,) int32
     lam: Array  # scalar
     plan: ChainPlan
+    # Low-precision payload (ISSUE 9): when ``qscheme`` is set, ``values``
+    # holds the quantized codes and ``scales`` the per-block f32 scales —
+    # shape (S,) for scheme "per_block", (S, block) for "per_row" (one scale
+    # per block *row*, i.e. per input feature of the block).  The kernels
+    # dequantize in VMEM; nothing outside this pair changes layout, so a
+    # quantized chain shares the f32 chain's step tables and shard plans.
+    scales: Array | None = None
+    qscheme: str | None = None  # e.g. "int8:per_block", "fp8_e4m3:per_row"
 
     def tree_flatten(self):
-        return (self.values, self.in_idx, self.lam), self.plan
+        return (self.values, self.in_idx, self.lam, self.scales), (
+            self.plan,
+            self.qscheme,
+        )
 
     @classmethod
-    def tree_unflatten(cls, plan, children):
-        values, in_idx, lam = children
-        return cls(values, in_idx, lam, plan)
+    def tree_unflatten(cls, aux, children):
+        values, in_idx, lam, scales = children
+        plan, qscheme = aux
+        return cls(values, in_idx, lam, plan, scales, qscheme)
+
+    @property
+    def quantized(self) -> bool:
+        return self.qscheme is not None
+
+    @property
+    def values_dtype(self) -> str:
+        return str(jnp.dtype(self.values.dtype).name)
+
+    @property
+    def weight_bytes(self) -> int:
+        """HBM bytes of one full weight stream (values + scales) — the
+        post-quantization byte term the dispatch roofline prices."""
+        b = int(np.prod(self.values.shape)) * jnp.dtype(self.values.dtype).itemsize
+        if self.scales is not None:
+            b += int(np.prod(self.scales.shape)) * jnp.dtype(self.scales.dtype).itemsize
+        return b
+
+
+# Quantization schemes for PackedChain values: name -> (jnp dtype, qmax).
+# qmax is the largest representable magnitude the scale maps each block's
+# absmax onto (int8 symmetric: 127; fp8: the format's finite max).
+QUANT_DTYPES = {
+    "int8": (jnp.int8, 127.0),
+    "fp8_e4m3": (jnp.float8_e4m3fn, 448.0),
+    "fp8_e5m2": (jnp.float8_e5m2, 57344.0),
+}
+QUANT_SCHEMES = ("per_block", "per_row")
+
+
+def _scale_broadcast(scales: Array) -> Array:
+    """Broadcastable view of scales against (S, blk, blk) values."""
+    if scales.ndim == 1:  # per_block (S,)
+        return scales[:, None, None]
+    return scales[:, :, None]  # per_row (S, blk)
+
+
+def expand_scales(scales: Array, blk: int) -> Array:
+    """Normalize scales to the (S, blk) per-row layout the kernels stream
+    (per_block (S,) scales broadcast exactly — no information change)."""
+    sc = scales.astype(jnp.float32)
+    if sc.ndim == 1:
+        sc = jnp.broadcast_to(sc[:, None], (sc.shape[0], blk))
+    return sc
+
+
+def quantize_chain(
+    chain: PackedChain, dtype: str = "int8", scheme: str = "per_block"
+) -> PackedChain:
+    """Quantize a packed chain's block values to ``dtype`` with per-block
+    (or per-block-row) f32 scales.
+
+    Symmetric absmax quantization: ``scale = absmax / qmax`` over each
+    block (scheme "per_block") or block row (scheme "per_row"), then
+    ``q = round(v / scale)`` clipped to the format (int8) or cast with
+    round-to-nearest (fp8).  All-zero groups get scale 1.0 so the round
+    trip stays exact.  ``lam``/``in_idx``/``plan`` are untouched — the
+    quantized chain runs through the same step tables and shard plans.
+
+    The round trip *from the quantized payload* is lossless:
+    ``quantize_chain(dequantize_chain(q)) == q`` bit-for-bit.
+    """
+    if chain.qscheme is not None:
+        raise ValueError(f"chain is already quantized ({chain.qscheme})")
+    if dtype not in QUANT_DTYPES:
+        raise ValueError(f"unknown quant dtype {dtype!r}; want one of {list(QUANT_DTYPES)}")
+    if scheme not in QUANT_SCHEMES:
+        raise ValueError(f"unknown quant scheme {scheme!r}; want one of {QUANT_SCHEMES}")
+    qdt, qmax = QUANT_DTYPES[dtype]
+    v = chain.values.astype(jnp.float32)
+    axes = (1, 2) if scheme == "per_block" else (2,)
+    amax = jnp.max(jnp.abs(v), axis=axes)
+    scales = jnp.where(amax > 0, amax / qmax, 1.0).astype(jnp.float32)
+    scaled = v / _scale_broadcast(scales)
+    if dtype == "int8":
+        q = jnp.clip(jnp.round(scaled), -qmax, qmax).astype(qdt)
+    else:
+        q = scaled.astype(qdt)  # round-to-nearest-even cast into the fp8 grid
+    return PackedChain(q, chain.in_idx, chain.lam, chain.plan, scales, f"{dtype}:{scheme}")
+
+
+def dequantize_chain(chain: PackedChain) -> PackedChain:
+    """Exact f32 reconstruction of a quantized chain (``q * scale`` per
+    block/row) — the reference the kernels' in-VMEM dequant must match
+    step-exactly.  No-op on an unquantized chain."""
+    if chain.qscheme is None:
+        return chain
+    v = chain.values.astype(jnp.float32) * _scale_broadcast(chain.scales)
+    return PackedChain(v, chain.in_idx, chain.lam, chain.plan)
 
 
 def pack_chain(bfaust: BlockFaust) -> PackedChain:
@@ -297,10 +398,18 @@ def pack_chain(bfaust: BlockFaust) -> PackedChain:
     return PackedChain(values, in_idx, bfaust.lam, plan)
 
 
-def unpack_chain(chain: PackedChain) -> BlockFaust:
+def unpack_chain(chain: PackedChain, dequantize: bool = True) -> BlockFaust:
     """Inverse of :func:`pack_chain`: recover the per-factor
     :class:`BlockFaust` from the flat-packed layout (pure reshapes/slices
-    driven by the plan's offset metadata — no repacking heuristics)."""
+    driven by the plan's offset metadata — no repacking heuristics).
+
+    Quantized chains dequantize to f32 factors by default so every
+    non-fused consumer (dense/bsr backends, ``todense``) sees exact
+    reconstructed values; ``dequantize=False`` keeps the low-precision
+    codes in the factor arrays (the sharded path slices scales
+    separately and dequantizes in VMEM)."""
+    if dequantize:
+        chain = dequantize_chain(chain)
     plan = chain.plan
     blk = plan.block
     factors = []

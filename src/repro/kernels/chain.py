@@ -76,7 +76,14 @@ META_COLS = 7
 DEFAULT_BT = 128
 
 
-def _chain_kernel(meta_ref, x_ref, v_ref, o_ref, act_ref, acc_ref, *, n_in0, blk):
+def _chain_kernel(meta_ref, x_ref, v_ref, *refs, n_in0, blk, quant):
+    # Quantized chains stream one extra input: the step's (1, blk) f32 scale
+    # row, dequantized against the int8/fp8 value block in VMEM right before
+    # the MXU dot — HBM still moves only 1-byte codes + blk scale floats.
+    if quant:
+        s_ref, o_ref, act_ref, acc_ref = refs
+    else:
+        o_ref, act_ref, acc_ref = refs
     s = pl.program_id(1)
     i_blk = meta_ref[s, 0]
     o_blk = meta_ref[s, 1]
@@ -92,9 +99,12 @@ def _chain_kernel(meta_ref, x_ref, v_ref, o_ref, act_ref, acc_ref, *, n_in0, blk
     def _open():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
+    v = v_ref[0]
+    if quant:
+        v = v.astype(jnp.float32) * s_ref[0][:, None]
     acc_ref[...] += jnp.dot(
         act_ref[par, i_blk],
-        v_ref[0],
+        v,
         preferred_element_type=jnp.float32,
     )
 
@@ -120,6 +130,7 @@ def chain_matmul(
     plan: ChainPlan,
     bt: int = DEFAULT_BT,
     interpret: bool = False,
+    scales: Array | None = None,
 ) -> Array:
     """Fused ``y = x @ F_1 @ ... @ F_J`` in a single ``pallas_call``.
 
@@ -127,6 +138,10 @@ def chain_matmul(
     blocks; ``meta``: (S, META_COLS) int32 step table (see module header;
     build with :func:`repro.kernels.ops.chain_meta`). Returns
     (B, O_J·blk) — ragged tails already zeroed, caller slices/scales.
+
+    ``scales``: optional (S, blk) f32 per-block-row scales for a quantized
+    ``values`` payload (int8/fp8) — streamed alongside each value block and
+    applied in VMEM (``v.astype(f32) * scale[:, None]``) before the dot.
     """
     b, in_pad = x.shape
     blk = plan.block
@@ -135,20 +150,32 @@ def chain_matmul(
     assert in_pad == plan.in_blocks[0] * blk, (in_pad, plan.in_blocks[0], blk)
     assert values.shape == (n_steps, blk, blk), values.shape
     assert meta.shape == (n_steps, META_COLS), meta.shape
+    quant = scales is not None
+    if quant:
+        assert scales.shape == (n_steps, blk), scales.shape
     out_w = plan.out_blocks[-1] * blk
     grid = (b // bt, n_steps)
 
+    in_specs = [
+        # x: whole batch tile, refetched only when the tile changes
+        pl.BlockSpec((bt, in_pad), lambda bi, s, meta: (bi, 0)),
+        # values: the s-th flat block — streams with double buffering
+        pl.BlockSpec((1, blk, blk), lambda bi, s, meta: (s, 0, 0)),
+    ]
+    operands = [meta, x, values]
+    if quant:
+        # scale rows ride the same per-step stream as the value blocks
+        in_specs.append(pl.BlockSpec((1, blk), lambda bi, s, meta: (s, 0)))
+        operands.append(scales)
+
     return pl.pallas_call(
-        functools.partial(_chain_kernel, n_in0=plan.in_blocks[0], blk=blk),
+        functools.partial(
+            _chain_kernel, n_in0=plan.in_blocks[0], blk=blk, quant=quant
+        ),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
-            in_specs=[
-                # x: whole batch tile, refetched only when the tile changes
-                pl.BlockSpec((bt, in_pad), lambda bi, s, meta: (bi, 0)),
-                # values: the s-th flat block — streams with double buffering
-                pl.BlockSpec((1, blk, blk), lambda bi, s, meta: (s, 0, 0)),
-            ],
+            in_specs=in_specs,
             # output: revisited across all S steps, flushed when bi advances
             out_specs=pl.BlockSpec((bt, out_w), lambda bi, s, meta: (bi, 0)),
             scratch_shapes=[
@@ -160,4 +187,4 @@ def chain_matmul(
         ),
         out_shape=jax.ShapeDtypeStruct((b, out_w), x.dtype),
         interpret=interpret,
-    )(meta, x, values)
+    )(*operands)

@@ -234,9 +234,17 @@ def wgrad_meta(plan: ChainPlan, in_idx: Array) -> Array:
 
 
 def _dgrad_kernel(
-    meta_ref, dy_ref, v_ref, o_ref, cot_ref, *, n_out_last, n_in0, blk, n_steps,
-    out_par,
+    meta_ref, dy_ref, v_ref, *refs, n_out_last, n_in0, blk, n_steps,
+    out_par, quant,
 ):
+    # Quantized chains stream the per-step (1, blk) f32 scale row next to
+    # the value block and dequantize in VMEM; scaling the block's *rows*
+    # commutes with the transposed read (g @ (diag(s)·Q)ᵀ = (g @ Qᵀ)·diag(s)
+    # applied columnwise), so dequant-then-dot is exact here too.
+    if quant:
+        s_ref, o_ref, cot_ref = refs
+    else:
+        o_ref, cot_ref = refs
     t = pl.program_id(1)
     dst = meta_ref[t, 0]
     src = meta_ref[t, 1]
@@ -256,9 +264,12 @@ def _dgrad_kernel(
 
     cols = jax.lax.broadcasted_iota(jnp.int32, cot_ref.shape[2:], 1)
     g = jnp.where(cols < meta_ref[t, 4], cot_ref[par, src], 0.0)
+    v = v_ref[0]
+    if quant:
+        v = v.astype(jnp.float32) * s_ref[0][:, None]
     # g @ F[s]ᵀ — the transposed block read straight off the packed layout
     cot_ref[1 - par, dst] += jax.lax.dot_general(
-        g, v_ref[0], (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        g, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     )
 
     @pl.when(t == n_steps - 1)
@@ -277,12 +288,15 @@ def chain_dgrad(
     plan: ChainPlan,
     bt: int = DEFAULT_BT,
     interpret: bool = False,
+    scales: Array | None = None,
 ) -> Array:
     """Fused ``dx = dy @ F_Jᵀ @ ... @ F_1ᵀ`` in a single ``pallas_call``.
 
     ``dy``: (B, O_J·blk) with B % bt == 0 (the cotangent of the *padded*
     forward output — ragged tails are re-masked in-kernel either way).
     Returns (B, IB_1·blk), the cotangent of the padded forward input.
+    ``scales``: optional (S, blk) f32 per-block-row scales for quantized
+    ``values`` — dequantized in VMEM alongside the reversed value stream.
     """
     b, out_w = dy.shape
     blk = plan.block
@@ -292,9 +306,21 @@ def chain_dgrad(
     bt = fit_bt(plan, bt, jnp.dtype(dy.dtype).itemsize, wgrad=False)
     assert out_w == rev.in_blocks[0] * blk, (out_w, rev.in_blocks[0], blk)
     assert values.shape == (n_steps, blk, blk), values.shape
+    quant = scales is not None
     meta = dgrad_meta(plan, in_idx)
     in_pad = rev.out_blocks[-1] * blk
     grid = (b // bt, n_steps)
+
+    in_specs = [
+        pl.BlockSpec((bt, out_w), lambda bi, t, meta: (bi, 0)),
+        # the t-th reversed flat block — streams with double buffering
+        pl.BlockSpec((1, blk, blk), lambda bi, t, meta: (n_steps - 1 - t, 0, 0)),
+    ]
+    operands = [meta, dy, values]
+    if quant:
+        assert scales.shape == (n_steps, blk), scales.shape
+        in_specs.append(pl.BlockSpec((1, blk), lambda bi, t, meta: (n_steps - 1 - t, 0)))
+        operands.append(scales)
 
     return pl.pallas_call(
         functools.partial(
@@ -304,17 +330,12 @@ def chain_dgrad(
             blk=blk,
             n_steps=n_steps,
             out_par=plan.n_factors % 2,
+            quant=quant,
         ),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
-            in_specs=[
-                pl.BlockSpec((bt, out_w), lambda bi, t, meta: (bi, 0)),
-                # the t-th reversed flat block — streams with double buffering
-                pl.BlockSpec(
-                    (1, blk, blk), lambda bi, t, meta: (n_steps - 1 - t, 0, 0)
-                ),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec((bt, in_pad), lambda bi, t, meta: (bi, 0)),
             scratch_shapes=[
                 # cotangent ping-pong, f32 (scatter-accumulated in place)
@@ -323,7 +344,7 @@ def chain_dgrad(
         ),
         out_shape=jax.ShapeDtypeStruct((b, in_pad), dy.dtype),
         interpret=interpret,
-    )(meta, dy, values)
+    )(*operands)
 
 
 # ---------------------------------------------------------------------------
@@ -332,10 +353,21 @@ def chain_dgrad(
 
 
 def _wgrad_kernel(
-    meta_ref, x_ref, dy_ref, v_ref, o_ref, acts_ref, cot_ref, acc_ref, *, s_pre,
-    n_in0, n_out_last, blk,
+    meta_ref, x_ref, dy_ref, v_ref, *refs, s_pre,
+    n_in0, n_out_last, blk, quant,
 ):
+    # Quantized chains dequantize the streamed block in VMEM once per step;
+    # the same dequantized block feeds the recompute dot (fwd phase) and the
+    # cotangent propagation (walk phase), so the checkpoint-free recompute
+    # stays a single value stream and the backward stays ≤ 2 launches.
+    if quant:
+        s_ref, o_ref, acts_ref, cot_ref, acc_ref = refs
+    else:
+        o_ref, acts_ref, cot_ref, acc_ref = refs
     t = pl.program_id(1)
+    v = v_ref[0]
+    if quant:
+        v = v.astype(jnp.float32) * s_ref[0][:, None]
 
     @pl.when(t == 0)
     def _load_x():
@@ -352,7 +384,7 @@ def _wgrad_kernel(
 
         acc_ref[...] += jnp.dot(
             acts_ref[meta_ref[t, 5] + meta_ref[t, 0]],
-            v_ref[0],
+            v,
             preferred_element_type=jnp.float32,
         )
 
@@ -392,7 +424,7 @@ def _wgrad_kernel(
         def _propagate():
             cot_ref[1 - par, dst] += jax.lax.dot_general(
                 g,
-                v_ref[0],
+                v,
                 (((1,), (1,)), ((), ())),
                 preferred_element_type=jnp.float32,
             )
@@ -407,12 +439,17 @@ def chain_wgrad(
     plan: ChainPlan,
     bt: int = DEFAULT_BT,
     interpret: bool = False,
+    scales: Array | None = None,
 ) -> Array:
     """Fused per-slot weight cotangent ``dvalues (S, blk, blk)`` in a single
     ``pallas_call`` (forward recompute + reversed cotangent walk — see the
     module docstring).  ``x``/``dy`` are the padded forward input/output
     cotangent, B % bt == 0.  Returns f32 (cast by the caller) — partial
     per-tile slabs are summed here when B > bt.
+
+    ``scales``: optional (S, blk) f32 per-block-row scales for quantized
+    ``values`` — the emitted cotangent is then wrt the *dequantized* f32
+    values (the caller chain-rules it onto the scales).
     """
     b, in_w = x.shape
     blk = plan.block
@@ -422,6 +459,7 @@ def chain_wgrad(
     bt = fit_bt(plan, bt, jnp.dtype(x.dtype).itemsize, wgrad=True)
     assert dy.shape == (b, plan.out_blocks[-1] * blk), dy.shape
     assert values.shape == (n_steps, blk, blk), values.shape
+    quant = scales is not None
     meta = wgrad_meta(plan, in_idx)
     n_tiles = b // bt
     out_w = plan.out_blocks[-1] * blk
@@ -430,11 +468,25 @@ def chain_wgrad(
     def _v_index(bi, t, meta):
         return (jnp.where(t < s_pre, t, s_pre + n_steps - 1 - t), 0, 0)
 
+    def _s_index(bi, t, meta):
+        return (jnp.where(t < s_pre, t, s_pre + n_steps - 1 - t), 0)
+
     def _o_index(bi, t, meta):
         # forward-phase steps park on the first walk block (S-1) so no
         # unwritten buffer is ever flushed; walk step t emits flat block
         # S-1-(t-s_pre)
         return (bi, jnp.where(t < s_pre, n_steps - 1, s_pre + n_steps - 1 - t), 0, 0)
+
+    in_specs = [
+        pl.BlockSpec((bt, in_w), lambda bi, t, meta: (bi, 0)),
+        pl.BlockSpec((bt, out_w), lambda bi, t, meta: (bi, 0)),
+        pl.BlockSpec((1, blk, blk), _v_index),
+    ]
+    operands = [meta, x, dy, values]
+    if quant:
+        assert scales.shape == (n_steps, blk), scales.shape
+        in_specs.append(pl.BlockSpec((1, blk), _s_index))
+        operands.append(scales)
 
     partials = pl.pallas_call(
         functools.partial(
@@ -443,15 +495,12 @@ def chain_wgrad(
             n_in0=plan.in_blocks[0],
             n_out_last=plan.out_blocks[-1],
             blk=blk,
+            quant=quant,
         ),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
-            in_specs=[
-                pl.BlockSpec((bt, in_w), lambda bi, t, meta: (bi, 0)),
-                pl.BlockSpec((bt, out_w), lambda bi, t, meta: (bi, 0)),
-                pl.BlockSpec((1, blk, blk), _v_index),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec((1, 1, blk, blk), _o_index),
             scratch_shapes=[
                 # every factor's input activation, flat (recompute target)
@@ -464,7 +513,7 @@ def chain_wgrad(
         ),
         out_shape=jax.ShapeDtypeStruct((n_tiles, n_steps, blk, blk), jnp.float32),
         interpret=interpret,
-    )(meta, x, dy, values)
+    )(*operands)
     return partials[0] if n_tiles == 1 else partials.sum(axis=0)
 
 

@@ -342,14 +342,20 @@ def _plan_shard(bf, mesh, data_axis, model_axis) -> ShardPlan:
 # ---------------------------------------------------------------------------
 
 
-def _seg_apply(y, seg_vals, seg_idx, plan, use_kernel, bt, interpret):
+def _seg_apply(y, seg_vals, seg_idx, plan, use_kernel, bt, interpret, seg_scales=None):
     """One fused segment on the local shard — Pallas kernel (whose
     ``custom_vjp`` is the fused dgrad/wgrad pair of ``chain_bwd.py``) or
-    the step-exact jnp oracle off-TPU (XLA autodiff)."""
+    the step-exact jnp oracle off-TPU (XLA autodiff).  ``seg_scales``
+    (segment-local (S_seg, blk) f32) routes to the dequantizing variants
+    when the value blocks are a quantized int8/fp8 payload."""
     if use_kernel:
-        from repro.kernels.ops import _chain_pallas
+        from repro.kernels.ops import _chain_pallas, _chain_pallas_q
 
+        if seg_scales is not None:
+            return _chain_pallas_q(y, seg_vals, seg_scales, seg_idx, plan, bt, interpret)
         return _chain_pallas(y, seg_vals, seg_idx, plan, bt, interpret)
+    if seg_scales is not None:
+        return _ref.packed_chain_q_ref(y, seg_vals, seg_idx, plan, seg_scales)
     return _ref.packed_chain_ref(y, seg_vals, seg_idx, plan)
 
 
@@ -364,6 +370,7 @@ def sharded_chain_apply(
     use_kernel: bool = False,
     bt: int = 128,
     interpret: bool = True,
+    scales: Array | None = None,
 ) -> Array:
     """Distributed ``y = lam · x @ F_1 @ ... @ F_J`` under ``shard_map``.
 
@@ -372,6 +379,14 @@ def sharded_chain_apply(
     the placement differs.  ``plan`` may be precomputed via
     :func:`plan_shard` (the apply reuses it for the jit cache and so the
     dispatch report prices the same plan that runs).
+
+    Quantized chains: pass ``bf`` with its factor values holding the
+    int8/fp8 codes (``unpack_chain(chain, dequantize=False)``) and
+    ``scales`` the full-chain (S, blk) f32 per-block-row scales
+    (``expand_scales``).  Scales shard by out-block over the model axis
+    exactly like the value blocks they scale, and each shard's segments
+    dequantize in VMEM — per-shard weight traffic stays
+    ``s_tot/n_model`` *bytes* + its scale rows.
     """
     if plan is None:
         plan = plan_shard(bf, mesh, data_axis, model_axis)
@@ -389,10 +404,26 @@ def sharded_chain_apply(
     if bpad:
         x2 = jnp.pad(x2, ((0, bpad), (0, 0)))
 
+    fac_scales = None
+    if scales is not None:
+        # slice the flat (S, blk) scale rows back per factor, mirroring the
+        # (factor, out-block, slot) order of the packed value stream
+        fac_scales, off = [], 0
+        for f in bf.factors:
+            n = f.n_out_blocks * f.k
+            fac_scales.append(
+                scales[off : off + n].reshape(f.n_out_blocks, f.k, blk)
+            )
+            off += n
+
     if plan.mode == "model":
-        y2 = _apply_model_sharded(x2, bf, mesh, plan, use_kernel, bt, interpret)
+        y2 = _apply_model_sharded(
+            x2, bf, mesh, plan, use_kernel, bt, interpret, fac_scales
+        )
     else:
-        y2 = _apply_replicated(x2, bf, mesh, plan, use_kernel, bt, interpret)
+        y2 = _apply_replicated(
+            x2, bf, mesh, plan, use_kernel, bt, interpret, scales
+        )
 
     y = y2[:b].reshape(*batch_shape, -1)
     if y.shape[-1] != bf.out_features:
@@ -400,13 +431,16 @@ def sharded_chain_apply(
     return bf.lam.astype(y.dtype) * y
 
 
-def _apply_model_sharded(x2, bf, mesh, plan, use_kernel, bt, interpret):
+def _apply_model_sharded(x2, bf, mesh, plan, use_kernel, bt, interpret, fac_scales=None):
     segments = plan.segments
     model_axis = plan.model_axis
     n_model = plan.n_model
+    n_fac = len(bf.factors)
+    quant = fac_scales is not None
 
     def local(x_loc, *flat):
-        vals, idxs = flat[: len(bf.factors)], flat[len(bf.factors):]
+        vals, idxs = flat[:n_fac], flat[n_fac : 2 * n_fac]
+        scls = flat[2 * n_fac :] if quant else None
         p = jax.lax.axis_index(model_axis)
         y = x_loc
         for seg in segments:
@@ -414,6 +448,11 @@ def _apply_model_sharded(x2, bf, mesh, plan, use_kernel, bt, interpret):
                 y = jax.lax.all_gather(y, model_axis, axis=1, tiled=True)
             seg_vals = jnp.concatenate(
                 [vals[j].reshape(-1, plan.block, plan.block) for j in seg.factors]
+            )
+            seg_scl = (
+                jnp.concatenate([scls[j].reshape(-1, plan.block) for j in seg.factors])
+                if quant
+                else None
             )
             parts = []
             for pos, j in enumerate(seg.factors):
@@ -424,12 +463,19 @@ def _apply_model_sharded(x2, bf, mesh, plan, use_kernel, bt, interpret):
                     ij = ij - p * seg.plan.in_blocks[pos]
                 parts.append(ij)
             seg_idx = jnp.concatenate(parts)
-            y = _seg_apply(y, seg_vals, seg_idx, seg.plan, use_kernel, bt, interpret)
+            y = _seg_apply(
+                y, seg_vals, seg_idx, seg.plan, use_kernel, bt, interpret, seg_scl
+            )
         return y
 
     in_specs = [P(plan.data_spec, None)]
-    in_specs += [P(model_axis, None, None, None)] * len(bf.factors)
-    in_specs += [P(model_axis, None)] * len(bf.factors)
+    in_specs += [P(model_axis, None, None, None)] * n_fac
+    in_specs += [P(model_axis, None)] * n_fac
+    operands = [f.values for f in bf.factors] + [f.in_idx for f in bf.factors]
+    if quant:
+        # scale rows shard by out-block exactly like the blocks they scale
+        in_specs += [P(model_axis, None, None)] * n_fac
+        operands += list(fac_scales)
     fn = shard_map(
         local,
         mesh=mesh,
@@ -437,27 +483,50 @@ def _apply_model_sharded(x2, bf, mesh, plan, use_kernel, bt, interpret):
         out_specs=P(plan.data_spec, model_axis),
         check_rep=False,
     )
-    return fn(x2, *[f.values for f in bf.factors], *[f.in_idx for f in bf.factors])
+    return fn(x2, *operands)
 
 
-def _apply_replicated(x2, bf, mesh, plan, use_kernel, bt, interpret):
+def _apply_replicated(x2, bf, mesh, plan, use_kernel, bt, interpret, scales=None):
     chain = pack_chain(bf) if _pack_ok(bf) else None
 
     if chain is not None:  # fusable: one local fused launch per shard
 
-        def local(x_loc, values, in_idx):
+        def local(x_loc, values, in_idx, *rest):
             return _seg_apply(
-                x_loc, values, in_idx, chain.plan, use_kernel, bt, interpret
+                x_loc, values, in_idx, chain.plan, use_kernel, bt, interpret,
+                rest[0] if rest else None,
             )
 
+        in_specs = [P(plan.data_spec, None), P(None, None, None), P(None)]
+        operands = [chain.values, chain.in_idx]
+        if scales is not None:  # replicated scale rows next to replicated codes
+            in_specs.append(P(None, None))
+            operands.append(scales)
         fn = shard_map(
             local,
             mesh=mesh,
-            in_specs=(P(plan.data_spec, None), P(None, None, None), P(None)),
+            in_specs=tuple(in_specs),
             out_specs=P(plan.data_spec, None),
             check_rep=False,
         )
-        return fn(x2, chain.values, chain.in_idx)
+        return fn(x2, *operands)
+
+    if scales is not None:
+        # non-fusable fallback with a quantized payload: dequantize the
+        # factor values up front (quantized chains always originate from a
+        # packable PackedChain, so this branch is defensive only)
+        blk = bf.factors[0].bk
+        factors, off = [], 0
+        for f in bf.factors:
+            n = f.n_out_blocks * f.k
+            sc = scales[off : off + n].reshape(f.n_out_blocks, f.k, blk)
+            factors.append(
+                dataclasses.replace(
+                    f, values=f.values.astype(jnp.float32) * sc[..., None]
+                )
+            )
+            off += n
+        bf = BlockFaust(tuple(factors), bf.lam)
 
     # non-fusable chain (ragged/non-uniform): per-factor reference chain,
     # still batch-sharded — the always-works floor

@@ -147,6 +147,70 @@ _chain_pallas.defvjp(_chain_pallas_fwd, _chain_pallas_bwd)
 
 
 # ---------------------------------------------------------------------------
+# Quantized fused chain path (int8/fp8 values + per-block-row f32 scales)
+# ---------------------------------------------------------------------------
+
+
+def _dq_cotangent(values: Array, dv_deq: Array) -> tuple[Array, Array]:
+    """Chain-rule the wgrad cotangent (taken wrt the *dequantized* f32
+    values ``v = q·s``) onto the quantized pair: the codes are frozen
+    (zero/symbolic-zero cotangent — requantization, not gradient descent,
+    updates them), the scales get ``dL/ds[s,r] = Σ_c q[s,r,c]·dv[s,r,c]``."""
+    dscales = jnp.sum(values.astype(jnp.float32) * dv_deq, axis=2)
+    if jnp.issubdtype(values.dtype, jnp.integer):
+        dvalues = np.zeros(values.shape, dtype=jax.dtypes.float0)
+    else:  # fp8 payloads are inexact dtypes: JAX wants a same-dtype cotangent
+        dvalues = jnp.zeros(values.shape, dtype=values.dtype)
+    return dvalues, dscales
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def _chain_pallas_q(x, values, scales, in_idx, plan: ChainPlan, bt: int, interpret: bool):
+    """Fused chain apply on a quantized value stream: ``values`` int8/fp8
+    (S, blk, blk) codes, ``scales`` (S, blk) f32 per-block-row scales
+    (per-block schemes arrive pre-broadcast — exact), dequantized in VMEM
+    per step.  Same grid/step tables as :func:`_chain_pallas`."""
+    return chain_matmul(
+        x,
+        values,
+        chain_meta(plan, in_idx),
+        plan=plan,
+        bt=bt,
+        interpret=interpret,
+        scales=scales,
+    )
+
+
+def _chain_pallas_q_fwd(x, values, scales, in_idx, plan, bt, interpret):
+    y = _chain_pallas_q(x, values, scales, in_idx, plan, bt, interpret)
+    return y, (x, values, scales, in_idx)
+
+
+def _chain_pallas_q_bwd(plan, bt, interpret, res, dy):
+    x, values, scales, in_idx = res
+    if os.environ.get("REPRO_CHAIN_BWD") == "ref":
+        dx, dv_deq = chain_bwd_ref(
+            x, _ref.dequant_values(values, scales), in_idx, dy, plan=plan
+        )
+        dx = dx.astype(x.dtype)
+    else:
+        # same two fused launches as the f32 backward — the kernels
+        # dequantize during the recompute walk, no extra launch
+        dx = chain_dgrad(
+            dy, values, in_idx, plan=plan, bt=bt, interpret=interpret, scales=scales
+        ).astype(x.dtype)
+        dv_deq = chain_wgrad(
+            x, dy, values, in_idx, plan=plan, bt=bt, interpret=interpret, scales=scales
+        )
+    dvalues, dscales = _dq_cotangent(values, dv_deq)
+    d_idx = np.zeros(in_idx.shape, dtype=jax.dtypes.float0)
+    return dx, dvalues, dscales, d_idx
+
+
+_chain_pallas_q.defvjp(_chain_pallas_q_fwd, _chain_pallas_q_bwd)
+
+
+# ---------------------------------------------------------------------------
 # Public API
 # ---------------------------------------------------------------------------
 
@@ -195,14 +259,27 @@ def packed_chain_apply(
     Arbitrary leading batch dims; pads/slices features and batch like
     :func:`bsr_apply`.  ``use_kernel=False`` runs the step-exact jnp oracle
     (``ref.packed_chain_ref``) — same packed arrays, no Pallas.
+
+    Quantized chains (``chain.qscheme`` set) route to the dequantizing
+    kernel/oracle pair: scales are normalized to the (S, blk) per-row
+    layout here (a differentiable broadcast for per-block schemes, so
+    scale gradients reduce correctly) and dequantization happens in VMEM.
     """
     plan = chain.plan
     in_pad = plan.in_blocks[0] * plan.block
     pad = in_pad - x.shape[-1]
     if pad:
         x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    quant = chain.qscheme is not None
+    if quant:
+        sc = chain.scales.astype(jnp.float32)
+        if sc.ndim == 1:  # per_block → per-row broadcast (exact)
+            sc = jnp.broadcast_to(sc[:, None], (sc.shape[0], plan.block))
     if not use_kernel:
-        y = _ref.packed_chain_ref(x, chain.values, chain.in_idx, plan)
+        if quant:
+            y = _ref.packed_chain_q_ref(x, chain.values, chain.in_idx, plan, sc)
+        else:
+            y = _ref.packed_chain_ref(x, chain.values, chain.in_idx, plan)
     else:
         batch_shape = x.shape[:-1]
         b = int(np.prod(batch_shape)) if batch_shape else 1
@@ -210,7 +287,10 @@ def packed_chain_apply(
         bpad = (-b) % bt
         if bpad:
             x2 = jnp.pad(x2, ((0, bpad), (0, 0)))
-        y2 = _chain_pallas(x2, chain.values, chain.in_idx, plan, bt, interpret)
+        if quant:
+            y2 = _chain_pallas_q(x2, chain.values, sc, chain.in_idx, plan, bt, interpret)
+        else:
+            y2 = _chain_pallas(x2, chain.values, chain.in_idx, plan, bt, interpret)
         y = y2[:b].reshape(*batch_shape, -1)
     if y.shape[-1] != plan.out_features:
         y = y[..., : plan.out_features]

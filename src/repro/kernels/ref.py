@@ -99,6 +99,27 @@ def packed_chain_ref(x: Array, values: Array, in_idx: Array, plan) -> Array:
     return y
 
 
+def dequant_values(values: Array, scales: Array) -> Array:
+    """Step-exact dequantization of a quantized flat value stream:
+    ``v[s] = q[s].astype(f32) * scales[s][:, None]`` — bit-identical to the
+    in-VMEM dequant every kernel performs per step (``scales`` is the
+    normalized (S, blk) per-block-row layout from
+    :func:`repro.core.compress.expand_scales`)."""
+    return values.astype(jnp.float32) * scales[:, :, None]
+
+
+def packed_chain_q_ref(
+    x: Array, values: Array, in_idx: Array, plan, scales: Array
+) -> Array:
+    """Dequantizing oracle for the quantized fused kernels: dequantize each
+    block exactly as the kernel does (elementwise, per step — so the walk
+    below is step-exact against the VMEM dequant), then run the standard
+    chain walk.  Differentiable: grads wrt ``x`` and ``scales`` flow
+    through this graph and are the parity target for the quantized
+    custom-VJP backward."""
+    return packed_chain_ref(x, dequant_values(values, scales), in_idx, plan)
+
+
 def blockfaust_apply_ref(x: Array, factors, lam: Array) -> Array:
     """Chain apply ``y = lam · (((x @ F_1) @ F_2) ...)`` with padding/slicing
     at the chain boundaries (pure-jnp oracle for the kernel chain)."""

@@ -39,20 +39,33 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.compress import BlockFaust
+from repro.core.compress import (
+    BlockFaust,
+    PackedChain,
+    pack_chain,
+    quantize_chain,
+)
 
 VALUES_ONLY, REPACK = "values_only", "repack"
 
 
 @dataclasses.dataclass(frozen=True)
 class SwapReport:
-    """What one :func:`hot_swap` publication did."""
+    """What one :func:`hot_swap` / :func:`quantized_swap` publication did."""
 
     kind: str  # "values_only" | "repack"
     s_tot_before: int
     s_tot_after: int
     retrace: bool  # will the next engine step retrace its closures?
     invalidated: int  # autotune entries explicitly dropped (repack only)
+    # Quantized swaps only (defaults preserve the f32 report contract):
+    requantized: bool = False  # new values re-quantized to the old layout
+    # A values-only f32 swap is token-exact for post-swap requests by
+    # construction.  A *quantized* values-only swap is classified
+    # token-exact only when requantization reproduced the serving chain's
+    # scales bit-for-bit — changed scales mean changed rounding points, so
+    # equality with a from-scratch process is no longer structural.
+    token_exact: bool = True
 
 
 def classify_swap(old: BlockFaust, new: BlockFaust) -> str:
@@ -141,6 +154,68 @@ def hot_swap(target, new: BlockFaust) -> SwapReport:
             for fo, fn in zip(old.factors, new.factors)
         ),
         invalidated=invalidated,
+    )
+
+
+def requantize_like(old: PackedChain, new) -> PackedChain:
+    """Quantize a refreshed f32 chain against the serving chain's existing
+    quantization layout (same values dtype, same scale scheme — the
+    ``qscheme`` string).  ``new`` may be a :class:`PackedChain` or a
+    :class:`BlockFaust` (packed first).  Raises when ``old`` is not
+    quantized or ``new`` already is (double quantization is lossy in a way
+    no swap should silently perform)."""
+    if old.qscheme is None:
+        raise ValueError("requantize_like: serving chain is not quantized")
+    pc = pack_chain(new) if isinstance(new, BlockFaust) else new
+    if pc.qscheme is not None:
+        raise ValueError(
+            "requantize_like: refreshed chain is already quantized; "
+            "hand the f32 chain and let the swap pick the layout"
+        )
+    dtype, scheme = old.qscheme.split(":")
+    return quantize_chain(pc, dtype, scheme)
+
+
+def quantized_swap(old: PackedChain, new) -> tuple[PackedChain, SwapReport]:
+    """Values-only-style swap for a *quantized* serving chain.
+
+    Re-quantizes the refreshed chain ``new`` (f32 ``PackedChain`` or
+    ``BlockFaust``) against ``old``'s existing layout and classifies the
+    result: ``values_only`` when the support survived (same plan, same
+    ``in_idx``), ``repack`` otherwise (old-signature autotune entries are
+    invalidated, exactly as :func:`hot_swap` does — the ``|vq:`` key
+    component shares the invalidation prefix).  ``token_exact`` is True
+    only when requantization reproduced the old scales bit-for-bit; a
+    scale that moved means the new chain rounds to different grid points
+    than the one it replaces, so post-swap decodes are equivalent to a
+    fresh process but not to the pre-swap stream.  Returns the quantized
+    replacement chain and the report — publishing it (engine param flip)
+    is the caller's step, same as any values-only swap."""
+    from repro.api import autotune
+
+    new_q = requantize_like(old, new)
+    if old.plan == new_q.plan and np.array_equal(
+        np.asarray(old.in_idx), np.asarray(new_q.in_idx)
+    ):
+        kind, invalidated = VALUES_ONLY, 0
+    else:
+        kind = REPACK
+        from repro.api.operator import FaustOp
+
+        invalidated = autotune.invalidate(
+            autotune.op_key_prefix(FaustOp.from_packed(old))
+        )
+    token_exact = kind == VALUES_ONLY and np.array_equal(
+        np.asarray(old.scales), np.asarray(new_q.scales)
+    )
+    return new_q, SwapReport(
+        kind=kind,
+        s_tot_before=int(np.prod(old.values.shape)),
+        s_tot_after=int(np.prod(new_q.values.shape)),
+        retrace=kind == REPACK,
+        invalidated=invalidated,
+        requantized=True,
+        token_exact=token_exact,
     )
 
 

@@ -34,8 +34,40 @@ def test_load_rows_filters_and_dedups(tmp_path):
         {"name": "a", "us_per_call": 20.0},           # duplicate: last wins
         {"name": "b", "us_per_call": "5"},            # numeric string: kept
     ])
-    rows = check_bench.load_rows(path)
+    rows, n_zero = check_bench.load_rows(path)
     assert rows == {"a": 20.0, "b": 5.0}
+    assert n_zero == 2  # the missing-us and the 0.0 rows, counted not lost
+
+
+def test_zero_rows_excluded_independently_of_min_us(tmp_path, capsys):
+    """An accuracy-only row never enters the timing math — even with the
+    ``--min-us`` floor at 0, where every *timed* row is gated."""
+    base = _write(tmp_path, "base.json", [
+        {"name": "quantre_meg_int8", "us_per_call": 0.0},
+        {"name": "timed", "us_per_call": 1000.0},
+    ])
+    new = _write(tmp_path, "new.json", [
+        {"name": "quantre_meg_int8", "us_per_call": 0.0},
+        {"name": "timed", "us_per_call": 1001.0},
+    ])
+    rc = check_bench.main([new, "--baseline", base, "--min-us", "0"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "excluded 1 accuracy-only rows" in out
+    assert "quantre_meg_int8:" not in out  # never a compared/gated row
+
+
+def test_zero_row_in_one_side_never_divides_by_zero(tmp_path):
+    """A row that is 0.0 in the baseline but timed in the new run (or vice
+    versa) is not comparable — it must drop out instead of producing a
+    division by the zero baseline."""
+    base = _write(tmp_path, "base.json", [
+        {"name": "was_accuracy", "us_per_call": 0.0},
+    ])
+    new = _write(tmp_path, "new.json", [
+        {"name": "was_accuracy", "us_per_call": 5000.0},
+    ])
+    assert check_bench.main([new, "--baseline", base, "--min-us", "0"]) == 0
 
 
 def test_no_comparable_rows_passes(tmp_path, capsys):

@@ -31,6 +31,10 @@ tracked across PRs, e.g.::
                         Poisson load: per-decode-step time, p50/p99
                         latency, TTFT, tokens/s, batch occupancy
                         (EXPERIMENTS.md §Serving engine)
+  serve_load_faults   — the same engine through a scripted FaultInjector
+                        at ~10% decode fault rate: goodput, shed/retry/
+                        quarantine counts (EXPERIMENTS.md §Fault
+                        tolerance)
   streaming_track     — time-varying operator under scripted drift:
                         warm StreamingFaust tracking vs cold per-snapshot
                         refactorization — RE-vs-updates and sweeps/us per
@@ -107,6 +111,7 @@ def main() -> None:
         "batch_compress": batch_compress.run,
         "shard_scaling": shard_scaling.run,
         "serve_load": serve_load.run,
+        "serve_load_faults": serve_load.run_faults,
         "streaming_track": streaming_track.run,
         "quantized_re": quantized_re.run,
     }

@@ -15,6 +15,13 @@ smoke LM and measures the serving numbers the scheduler design is for:
   occupancy.  Arrival draws are deterministic in the seed; the wall
   clock only decides *when* each scripted arrival is released, so the
   load factors (not host speed) shape the queueing story.
+* ``serve_load_faults`` (``--faults``): the same saturated run through a
+  scripted :class:`~repro.runtime.faults.FaultInjector` — a transient
+  ``step_error`` every 10th decode call (≈10% decode fault rate), one
+  NaN-poisoned stream, and admission control sized to shed the last two
+  submissions.  Reports **goodput** (completed streams' tokens per
+  engine-second), shed/failed/retry counts, and asserts goodput stays
+  nonzero under faults (EXPERIMENTS.md §Fault tolerance).
 
 All rows derive their timing from ``EngineStats`` (the engine's own
 accounting, incl. the prefill-sampled token — the PR-7 fix), not from an
@@ -165,5 +172,76 @@ def run() -> None:
         )
 
 
+def run_faults() -> None:
+    """Saturated load at a ~10% scripted fault rate: the supervision
+    layer must keep goodput nonzero while shedding/retrying around the
+    faults (the ISSUE 10 acceptance criterion, as a tracked BENCH row)."""
+    from repro.runtime.engine import DONE
+    from repro.runtime.faults import FaultInjector, FaultSpec
+
+    cfg, params = _model()
+    rng = np.random.default_rng(SEED)
+    prompts, budgets = _requests(cfg, rng, N_REQ)
+    # ~10% of decode calls raise (transient, each fires once); one stream
+    # is NaN-poisoned on its second decode step.  All indices are per-op
+    # call counters, so the schedule is deterministic on any host.
+    faults = [
+        FaultSpec("step_error", step=s, op="decode", count=1)
+        for s in range(2, 80, 10)
+    ]
+    faults.append(FaultSpec("nan_logits", step=1, op="decode", rid="req3"))
+    ex = FaultInjector(
+        LMExecutor(cfg, params, MAX_LEN, n_slots=N_SLOTS), faults=faults
+    )
+    engine = Engine(
+        ex, retry_budget=5, backoff_s=0.01, max_queue=N_REQ - 2
+    )
+    rids = [
+        engine.submit(p, b, rid=f"req{i}")
+        for i, (p, b) in enumerate(zip(prompts, budgets))
+    ]
+    engine.run()
+
+    st = engine.stats
+    done_tokens = sum(
+        len(engine.done[r].generated)
+        for r in rids
+        if engine.done[r].state == DONE
+    )
+    wall = st.prefill_s + st.decode_s
+    goodput = done_tokens / max(wall, 1e-9)
+    shed = st.rejected + st.timed_out
+    n_faults = len(ex.fired_log)
+    assert goodput > 0, "no goodput under 10% fault rate"
+    assert st.retries > 0, "fault schedule never exercised a retry"
+    assert st.quarantined == 1 and engine.done["req3"].state != DONE
+    # transient errors must resolve via retry: the only terminal failure
+    # is the NaN-quarantined stream (also proves ragged-length re-prefill
+    # — prompt+generated is rarely attn_chunk-aligned — works end to end)
+    assert st.failed == 1, f"transient faults failed streams: {st.failed}"
+    assert shed == 2, f"admission control shed {shed} != 2"
+    assert st.completed == N_REQ - shed - st.failed
+    emit(
+        "serve_load_faults",
+        st.decode_s / max(st.steps, 1) * 1e6,
+        f"goodput_tok_s={goodput:.1f};good_tokens={done_tokens};"
+        f"completed={st.completed};faults_fired={n_faults};"
+        f"retries={st.retries};failed={st.failed};"
+        f"quarantined={st.quarantined};shed={shed};"
+        f"demotions={st.demotions};n_req={N_REQ};n_slots={N_SLOTS}",
+        dispatch=_last_dispatch(st),
+    )
+
+
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--faults",
+        action="store_true",
+        help="run only the fault-injection axis (serve_load_faults row)",
+    )
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run_faults() if args.faults else run()

@@ -234,4 +234,24 @@ then
     exit 1
 fi
 echo "ci: quantization smoke leg OK"
+
+# Fault-injection smoke leg: the scripted fault suite (also in the tier-1
+# leg — re-run here standalone so a fault-path regression is named), then
+# the serving workflow end to end: saturated load through a FaultInjector
+# at ~10% decode fault rate must keep nonzero goodput while shedding,
+# retrying, and quarantining (benchmarks/serve_load.py --faults asserts
+# goodput > 0, retries > 0, failed == quarantined == 1, shed == 2).
+if ! PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} REPRO_AUTOTUNE=off \
+    timeout "$CI_TIMEOUT" \
+    python -m pytest -q tests/test_engine_faults.py > /dev/null; then
+    echo "ci: FAULT SUITE FAILED"
+    exit 1
+fi
+if ! PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} REPRO_ROOFLINE=builtin \
+    REPRO_AUTOTUNE=off timeout "$CI_TIMEOUT" \
+    python benchmarks/serve_load.py --faults > /dev/null; then
+    echo "ci: FAULT-INJECTION SMOKE FAILED"
+    exit 1
+fi
+echo "ci: fault-injection smoke leg OK"
 exit "$status"

@@ -242,6 +242,35 @@ def op_key_prefix(op) -> str:
     return f"{op.shape[0]}x{op.shape[1]}|J{op.n_factors}|s{op.s_tot}|"
 
 
+# ---------------------------------------------------------------------------
+# Session backend quarantine (degraded-mode dispatch)
+# ---------------------------------------------------------------------------
+
+# (op key prefix, backend) pairs that raised at apply time this session.
+# Process-local and deliberately NOT persisted: a launch failure is a
+# property of this host/session (driver state, VMEM pressure, a broken
+# lowering), not of the operator signature — the next process re-tries
+# the full ladder.  Checked by repro.api.dispatch.dispatch() so a
+# quarantined backend stops being priced/picked for the session.
+_QUARANTINE: set[tuple[str, str]] = set()
+
+
+def quarantine_backend(prefix: str, backend: str) -> None:
+    """Bar ``backend`` from auto dispatch for every operator sharing the
+    signature ``prefix`` (:func:`op_key_prefix`) for this process."""
+    _QUARANTINE.add((prefix, backend))
+
+
+def quarantined_backends(prefix: str) -> frozenset[str]:
+    """Backends quarantined for the signature ``prefix`` this session."""
+    return frozenset(b for p, b in _QUARANTINE if p == prefix)
+
+
+def clear_quarantine() -> None:
+    """Reset the session quarantine (tests)."""
+    _QUARANTINE.clear()
+
+
 def invalidate(prefix: str, path: str | None = None) -> int:
     """Drop every measured entry whose key starts with ``prefix`` from the
     persisted table (atomic rewrite, :func:`record`'s contract).  Returns

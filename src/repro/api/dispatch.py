@@ -120,6 +120,11 @@ class DispatchReport:
     # dtype of the stored block values ("int8"/"float8_e4m3fn"/... when the
     # chain is quantized; the activation dtype otherwise)
     values_dtype: str = ""
+    # degraded-mode dispatch: the backend that raised at apply time and
+    # was replaced by ``backend`` (source is then "demoted"; the failing
+    # (signature, backend) pair is session-quarantined in the autotune
+    # layer so later auto dispatches skip it up front)
+    demoted_from: str | None = None
 
     def as_row(self) -> dict:
         """Flat JSON-ready form for benchmark rows."""
@@ -140,6 +145,8 @@ class DispatchReport:
             "weight_bytes": self.weight_bytes,
             "values_dtype": self.values_dtype,
         }
+        if self.demoted_from is not None:
+            row["demoted_from"] = self.demoted_from
         if self.mesh_shape is not None:
             row["mesh_shape"] = {a: s for a, s in self.mesh_shape}
             row["collective_bytes"] = self.collective_bytes
@@ -425,6 +432,7 @@ def _sharded_est(
 def dispatch(
     op, batch: int, dtype, requested: str = "auto", shard: dict | None = None,
     grad: bool = False, bt: int | None = None, record: bool = True,
+    feasible: tuple[str, ...] | None = None,
 ) -> DispatchReport:
     """Decide (or record) the backend for one *leaf* operator.
 
@@ -454,9 +462,22 @@ def dispatch(
     advisory consult (e.g. the serving engine pricing the live decode
     batch each step) can't be mistaken for a decision an ``apply``
     actually staged.
+
+    ``feasible`` overrides the candidate set (a subset of the operator's
+    feasible backends) — the degraded-mode re-dispatch in
+    ``FaustOp.apply`` uses it to re-price after a backend raised.  Auto
+    requests additionally skip backends session-quarantined for this
+    operator's signature (``autotune.quarantine_backend``), unless that
+    would leave nothing.
     """
     from repro.api import autotune as _autotune
 
+    cand = op.feasible_backends() if feasible is None else tuple(feasible)
+    if requested == "auto" and _autotune._QUARANTINE:
+        barred = _autotune.quarantined_backends(_autotune.op_key_prefix(op))
+        kept = tuple(b for b in cand if b not in barred)
+        if kept:
+            cand = kept
     entry = None
     if requested == "auto" and _autotune.autotune_mode() != "off":
         # key_for_op is the one shared spelling of the lookup key — the
@@ -482,7 +503,7 @@ def dispatch(
         s_tot=op.s_tot,
         inner_dims=op.inner_dims(),
         n_factors=op.n_factors,
-        feasible=op.feasible_backends(),
+        feasible=cand,
         requested=requested,
         shard=shard,
         grad=grad,

@@ -42,6 +42,7 @@ structure (the static node kind/adjoint flags travel as aux data).
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Sequence
 
 import jax
@@ -203,6 +204,14 @@ def _under_ad(*trees) -> bool:
         for tree in trees
         for leaf in jax.tree_util.tree_leaves(tree)
     )
+
+
+def _degraded_on() -> bool:
+    """Whether degraded-mode dispatch (auto-backend failure → one priced
+    demotion to a reference path) is enabled — ``REPRO_DEGRADED``,
+    default on; ``0``/``off`` makes auto applies fail loud instead."""
+    v = os.environ.get("REPRO_DEGRADED", "").strip().lower()
+    return v not in ("0", "off", "false", "no")
 
 
 def _fusable(bf: BlockFaust) -> bool:
@@ -537,11 +546,6 @@ class FaustOp:
         self, x, backend, use_kernel, bt, interpret, grad=False, autotune=False
     ) -> Array:
         from repro.api import dispatch as _dispatch
-        from repro.kernels.ops import (
-            blockfaust_apply,
-            blockfaust_apply_t,
-            packed_chain_apply,
-        )
 
         rep = _conj_rep(self.rep) if self.conj else self.rep
         if backend != "auto" and backend not in self.feasible_backends():
@@ -582,12 +586,68 @@ class FaustOp:
                 use_kernel=use_kernel, interpret=interpret,
             )
         # auto and forced decisions both land on dispatch.last_report()
+        requested = backend
         report = _dispatch.dispatch(
             self, batch_of(x), x.dtype, requested=backend,
             shard=shard_summary, grad=grad, bt=bt,
         )
-        backend = report.backend
-        bt = report.bt  # caller-forced > autotuned winner > DEFAULT_BT
+        try:
+            return self._run_backend(
+                x, rep, report.backend, use_kernel, report.bt, interpret,
+                shard_plan, bf_sharded, shard_scales,
+            )
+        except Exception as exc:  # noqa: BLE001 — degraded-mode boundary
+            # Degraded-mode dispatch (ISSUE 10): an auto-chosen backend
+            # that raises (broken lowering, VMEM overrun, driver state)
+            # demotes ONCE down the priced ladder to a reference path
+            # (bsr/dense), quarantining the failing (signature, backend)
+            # for the session so later auto dispatches skip it up front.
+            # Forced backends re-raise: measurement sweeps and tests rely
+            # on forced failures staying loud.  Only trace/eager-visible
+            # failures are catchable — a runtime abort inside a compiled
+            # step is jax's to surface.
+            ladder = tuple(
+                b for b in report.feasible
+                if _dispatch._ORDER.get(b, 9) > _dispatch._ORDER.get(report.backend, -1)
+                and not b.startswith("fused")
+            )
+            if requested != "auto" or not _degraded_on() or not ladder:
+                raise
+            from repro.api import autotune as _at
+
+            _at.quarantine_backend(_at.op_key_prefix(self), report.backend)
+            demoted = _dispatch.dispatch(
+                self, batch_of(x), x.dtype, requested="auto",
+                shard=shard_summary, grad=grad, bt=None, record=False,
+                feasible=ladder,
+            )
+            demoted = dataclasses.replace(
+                demoted,
+                source="demoted",
+                demoted_from=report.backend,
+                reason=(
+                    f"{report.backend} raised {type(exc).__name__}: {exc}; "
+                    f"demoted to {demoted.backend} ({demoted.reason})"
+                ),
+            )
+            _dispatch._record(demoted)
+            return self._run_backend(
+                x, rep, demoted.backend, use_kernel, demoted.bt, interpret,
+                shard_plan, bf_sharded, shard_scales,
+            )
+
+    def _run_backend(
+        self, x, rep, backend, use_kernel, bt, interpret,
+        shard_plan=None, bf_sharded=None, shard_scales=None,
+    ) -> Array:
+        """Execute one already-decided backend (the tail of
+        :meth:`_leaf_apply`, shared by the primary and demoted attempts)."""
+        from repro.kernels.ops import (
+            blockfaust_apply,
+            blockfaust_apply_t,
+            packed_chain_apply,
+        )
+
         if backend == "fused_sharded":
             from repro.kernels import chain_sharded as _cs
 

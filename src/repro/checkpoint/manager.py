@@ -17,10 +17,22 @@ Design (DESIGN.md §6 fault tolerance):
 * **Async**: ``save_async`` snapshots device arrays to host memory
   synchronously (cheap) and writes files on a background thread, so the
   train loop resumes immediately. ``wait()`` joins before the next save.
+  A background write that *raises* (disk full, permissions) is captured
+  and re-raised from :meth:`wait` / the next :meth:`save_async` — it
+  never dies silently in the daemon thread (ISSUE 10).
+* **Integrity**: every shard's sha256 (of its raw array bytes, hashed at
+  snapshot time) lands in the manifest; :meth:`restore` re-hashes what it
+  reads and raises :class:`CorruptCheckpointError` on mismatch (or on a
+  missing/unloadable shard).  :meth:`latest_step` / :meth:`restore_latest`
+  *verify* candidate steps and fall back to the newest intact one, so a
+  torn or bit-rotted newest checkpoint degrades to the previous save
+  instead of killing the resume.  Pre-checksum checkpoints (no ``sha256``
+  keys) still restore — their shards just can't be verified.
 * **Retention**: ``keep`` most recent checkpoints are retained.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
@@ -32,6 +44,11 @@ import jax.numpy as jnp
 import numpy as np
 
 Array = jax.Array
+
+
+class CorruptCheckpointError(RuntimeError):
+    """A checkpoint step failed integrity verification (bad/missing shard
+    or sha256 mismatch)."""
 
 
 def _leaf_paths(tree) -> list[tuple[str, Any]]:
@@ -53,17 +70,28 @@ def _path_str(p) -> str:
     return str(p)
 
 
+def _shard_fname(name: str, offset) -> str:
+    return name.replace("/", "__") + "@" + "_".join(map(str, offset)) + ".npy"
+
+
+def _sha256(data: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(data).tobytes()).hexdigest()
+
+
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3):
         self.dir = directory
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
         self._thread: threading.Thread | None = None
+        self._exc: BaseException | None = None  # captured background failure
 
     # -- save ---------------------------------------------------------------
 
     def save_async(self, step: int, tree, extra: dict | None = None) -> None:
-        """Snapshot to host and write in the background."""
+        """Snapshot to host and write in the background.  Raises a prior
+        background write's captured exception before starting (so a train
+        loop cannot silently stream saves into a dead disk)."""
         self.wait()
         host_items = []
         for name, leaf in _leaf_paths(tree):
@@ -95,34 +123,49 @@ class CheckpointManager:
             "extra": extra or {},
             "leaves": {},
         }
+        # checksums are computed here, at snapshot time, over the exact
+        # bytes handed to the writer — a later disk/rot mismatch is then
+        # unambiguously a storage fault, not a snapshot race
         for name, offset, data, shape, dtype in deduped:
             manifest["leaves"].setdefault(
                 name, {"shape": list(shape), "dtype": dtype, "shards": []}
             )["shards"].append(
-                {"offset": list(offset), "shard_shape": list(data.shape)}
+                {
+                    "offset": list(offset),
+                    "shard_shape": list(data.shape),
+                    "sha256": _sha256(data),
+                }
             )
 
         def write():
-            tmp = os.path.join(self.dir, f"{step}.tmp")
-            final = os.path.join(self.dir, str(step))
-            os.makedirs(tmp, exist_ok=True)
-            for name, offset, data, _, _ in deduped:
-                fname = name.replace("/", "__") + "@" + "_".join(map(str, offset)) + ".npy"
-                np.save(os.path.join(tmp, fname), data)
-            with open(os.path.join(tmp, "manifest.json"), "w") as f:
-                json.dump(manifest, f)
-            if os.path.exists(final):
-                shutil.rmtree(final)
-            os.rename(tmp, final)
-            self._gc()
+            try:
+                tmp = os.path.join(self.dir, f"{step}.tmp")
+                final = os.path.join(self.dir, str(step))
+                os.makedirs(tmp, exist_ok=True)
+                for name, offset, data, _, _ in deduped:
+                    np.save(os.path.join(tmp, _shard_fname(name, offset)), data)
+                with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                    json.dump(manifest, f)
+                if os.path.exists(final):
+                    shutil.rmtree(final)
+                os.rename(tmp, final)
+                self._gc()
+            except BaseException as e:  # noqa: BLE001 — surfaced at wait()
+                self._exc = e
 
         self._thread = threading.Thread(target=write, daemon=True)
         self._thread.start()
 
     def wait(self) -> None:
+        """Join the in-flight background write; re-raise its exception if
+        it failed (the write is then *not* on disk — the step directory
+        was never renamed into place)."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._exc is not None:
+            exc, self._exc = self._exc, None
+            raise RuntimeError("background checkpoint write failed") from exc
 
     def _gc(self) -> None:
         steps = self.all_steps()
@@ -140,15 +183,56 @@ class CheckpointManager:
                 out.append(int(d))
         return sorted(out)
 
-    def latest_step(self) -> int | None:
+    def verify(self, step: int) -> bool:
+        """Whether ``step``'s manifest parses and every shard file loads
+        and matches its recorded sha256.  Shards from pre-checksum
+        manifests (no ``sha256`` key) are checked for loadability only."""
+        d = os.path.join(self.dir, str(step))
+        try:
+            with open(os.path.join(d, "manifest.json")) as f:
+                manifest = json.load(f)
+            for name, meta in manifest["leaves"].items():
+                for s in meta["shards"]:
+                    datum = np.load(os.path.join(d, _shard_fname(name, s["offset"])))
+                    want = s.get("sha256")
+                    if want is not None and _sha256(datum) != want:
+                        return False
+        except Exception:  # noqa: BLE001 — any failure means "not intact"
+            return False
+        return True
+
+    def latest_step(self, verified: bool = True) -> int | None:
+        """Newest step — by default the newest *intact* one: candidates
+        failing :meth:`verify` (torn write survivors, bit rot) are skipped
+        so a resume lands on a checkpoint that will actually restore.
+        ``verified=False`` is the raw directory listing."""
         steps = self.all_steps()
-        return steps[-1] if steps else None
+        if not verified:
+            return steps[-1] if steps else None
+        for s in reversed(steps):
+            if self.verify(s):
+                return s
+        return None
+
+    def restore_latest(self, target_tree, shardings=None):
+        """``restore`` of the newest intact step: ``(state, extra, step)``,
+        or ``(target_tree, None, None)`` when no intact checkpoint exists."""
+        step = self.latest_step()
+        if step is None:
+            return target_tree, None, None
+        state, extra = self.restore(step, target_tree, shardings)
+        return state, extra, step
 
     def restore(self, step: int, target_tree, shardings=None):
         """Restore into the structure of ``target_tree`` (shapes/dtypes from
         the manifest must match). ``shardings``: matching tree of
         NamedSharding for the *current* mesh — arrays are assembled
-        per-device from overlapping file shards (elastic restore)."""
+        per-device from overlapping file shards (elastic restore).
+
+        Every shard read is re-hashed against the manifest's sha256;
+        corruption raises :class:`CorruptCheckpointError` (use
+        :meth:`restore_latest` / :meth:`latest_step` to fall back to the
+        newest intact step instead)."""
         d = os.path.join(self.dir, str(step))
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)
@@ -171,13 +255,19 @@ class CheckpointManager:
                 for s in meta["shards"]:
                     off = s["offset"]
                     ss = s["shard_shape"]
-                    fname = (
-                        name.replace("/", "__")
-                        + "@"
-                        + "_".join(map(str, off))
-                        + ".npy"
-                    )
-                    datum = np.load(os.path.join(d, fname))
+                    fname = _shard_fname(name, off)
+                    try:
+                        datum = np.load(os.path.join(d, fname))
+                    except Exception as e:  # noqa: BLE001
+                        raise CorruptCheckpointError(
+                            f"step {step}: shard {fname} unreadable: {e}"
+                        ) from e
+                    want = s.get("sha256")
+                    if want is not None and _sha256(datum) != want:
+                        raise CorruptCheckpointError(
+                            f"step {step}: shard {fname} sha256 mismatch "
+                            "(bit rot or torn write)"
+                        )
                     sl = tuple(slice(o, o + n) for o, n in zip(off, ss))
                     full[sl] = datum
                 return full

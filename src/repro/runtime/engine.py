@@ -45,7 +45,35 @@ follows the batch as it breathes; the per-step
 freed (and may be reused immediately), the request returns to the *front*
 of the queue, and re-admission prefills ``prompt + generated`` — greedy
 decode recomputes the same stream token-exactly, so preemption is
-invisible in the output (pinned by tests/test_engine_sim.py).
+invisible in the output (pinned by tests/test_engine_sim.py).  Eviction
+is starvation-proof: re-queued preemptees are age-ordered (oldest
+arrival first) and a request that has been evicted ``max_evictions``
+times is pinned to its slot (``evict`` returns False).
+
+**Supervision.** One NaN logit, one failing kernel launch, or one stuck
+request must not take the engine down (ISSUE 10):
+
+* *Retry with backoff* — a forward that raises preempts the affected
+  requests through the eviction path (re-prefill of ``prompt +
+  generated`` keeps retried streams token-exact), charges each a retry
+  against ``retry_budget`` and delays re-admission by an exponential
+  backoff; over-budget requests turn terminal ``FAILED``.
+* *NaN quarantine* — non-finite logits rows (divergence — e.g. a
+  regressed FAµST unembedding) fail exactly the affected stream, never
+  the batch.
+* *Deadlines* — ``submit(..., ttl=...)`` sets a wall deadline; expiry
+  frees the slot (or sheds the queued request) with terminal state
+  ``TIMED_OUT``.
+* *Admission control* — ``max_queue`` sheds submissions at the door
+  (terminal ``REJECTED``) instead of queueing unboundedly.
+
+Terminal states and counters live on :class:`Request` /
+:class:`EngineStats`; every fault path is proven by scripted
+deterministic traces in ``tests/test_engine_faults.py`` driving
+:class:`repro.runtime.faults.FaultInjector` — including that a
+zero-fault injector run is byte-identical to no injector at all, and a
+zero-fault engine is byte-identical to the pre-supervision scheduler
+(the fast paths add no clock reads).
 
 The model side lives behind the small :class:`Executor` interface so the
 scheduler itself is testable with a pure-numpy deterministic model
@@ -58,6 +86,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import os
 import time
 from collections import OrderedDict, deque
 from typing import Any, Callable, Protocol, Sequence
@@ -80,6 +109,8 @@ __all__ = [
 
 
 QUEUED, RUNNING, DONE = "queued", "running", "done"
+# terminal non-success states (supervision; see module docstring)
+REJECTED, TIMED_OUT, FAILED = "rejected", "timed_out", "failed"
 
 
 @dataclasses.dataclass
@@ -105,6 +136,10 @@ class Request:
     first_token_t: float | None = None
     done_t: float | None = None
     n_evictions: int = 0
+    n_retries: int = 0
+    deadline: float | None = None  # absolute clock time (arrival + ttl)
+    not_before: float = 0.0  # retry backoff: earliest re-admission time
+    error: str | None = None  # why state is REJECTED/TIMED_OUT/FAILED
 
     def prompt_full(self) -> np.ndarray:
         """Prompt plus everything generated so far — what a re-admission
@@ -192,6 +227,14 @@ class EngineStats:
     completed: int = 0
     evicted: int = 0
     swaps: int = 0  # operator hot-swaps published (streaming.swap)
+    # supervision counters (terminal states + recovery actions)
+    rejected: int = 0  # shed at submit (queue over max_queue)
+    timed_out: int = 0  # deadline/TTL expiry (running or queued)
+    failed: int = 0  # retry budget exhausted or quarantined
+    retries: int = 0  # re-queues after a raised forward
+    quarantined: int = 0  # streams killed by the non-finite-logits guard
+    demotions: int = 0  # degraded-mode dispatch fallbacks observed
+    swap_rejects: int = 0  # guarded hot-swaps rolled back (streaming.swap)
     # per-decode-step observability
     queue_depth: list = dataclasses.field(default_factory=list)
     occupancy: dict = dataclasses.field(default_factory=dict)  # B_live -> steps
@@ -397,13 +440,33 @@ class LMExecutor:
         from repro.api import dispatch as _dispatch
 
         jnp = self._jnp
-        batch = {"tokens": jnp.asarray(prompt)[None]}
+        prompt = np.asarray(prompt)
+        n = prompt.shape[-1]
+        chunk = self.cfg.attn_chunk
+        head, tail = prompt, prompt[..., :0]
+        if n > chunk and n % chunk:
+            # Chunked prefill (flash attention / SSD scan) requires
+            # S % attn_chunk == 0 for S > chunk.  Re-prefills of
+            # prompt+generated — the retry and evict re-admission paths —
+            # arrive at ragged lengths, so prefill the aligned prefix and
+            # replay the remainder through the decode step: the final
+            # replayed token's logits are exactly the full prompt's
+            # prefill logits (token-exact by construction).
+            aligned = (n // chunk) * chunk
+            head, tail = prompt[..., :aligned], prompt[..., aligned:]
+        batch = {"tokens": jnp.asarray(head)[None]}
         for k, v in extras.items():
             batch[k] = jnp.asarray(v)[None]
         mark = _dispatch.last_report()
         logits, self.pool = self._prefill_fn(
             self.params, batch, self.pool, jnp.asarray(slot, jnp.int32)
         )
+        slot_idx = jnp.asarray([slot], jnp.int32)
+        for i in range(tail.shape[-1]):
+            tok = jnp.asarray(tail[..., i : i + 1][None])  # (1,1)/(1,K,1)
+            logits, self.pool = self._decode_fn(
+                self.params, tok, self.pool, slot_idx
+            )
         logits.block_until_ready()
         if _dispatch.last_report() is not mark:  # a FAµST layer dispatched
             self.faust_dispatch = _dispatch.last_report()
@@ -436,6 +499,15 @@ class LMExecutor:
             return np.asarray(tok.reshape(tok.shape[0], self.cfg.n_codebooks, 1))
         return np.asarray(tok.reshape(-1, 1))
 
+    def row_finite(self, logits) -> np.ndarray:
+        """Per-row all-finite mask of the last position, ``(B,)`` bool —
+        the engine's NaN guard.  Reduced on device so the guard moves B
+        bools per step instead of the ``(B, V)`` logits."""
+        jnp = self._jnp
+        step = logits[:, -1].astype(jnp.float32)  # (B, V) or (B, K, V)
+        fin = jnp.isfinite(step).reshape(step.shape[0], -1).all(axis=-1)
+        return np.asarray(fin)
+
     def free(self, slot: int) -> None:
         # Cache rows are never read unless their slot is gathered live,
         # and a reuse prefill overwrites pos — nothing to scrub.
@@ -453,9 +525,41 @@ class Engine:
     ``clock`` is injectable (``tests/engine_sim.FakeClock``) so the whole
     scheduler — admission order, slot schedule, stats — is deterministic
     under test with zero wall-clock dependence.
+
+    Supervision policy (all keyword-only; ``None`` ⇒ env default):
+
+    * ``retry_budget`` / ``backoff_s`` — a raised forward preempts the
+      affected requests through the eviction path; each gets at most
+      ``retry_budget`` retries (env ``REPRO_RETRY_BUDGET``, default 2)
+      with exponential backoff ``backoff_s · 2^(n_retries−1)`` (env
+      ``REPRO_RETRY_BACKOFF``, default 0.05 s) before terminal FAILED.
+    * ``max_evictions`` — starvation guard: a request evicted this many
+      times is pinned to its slot (env ``REPRO_MAX_EVICTIONS``, default
+      8; ``<= 0`` disables the cap).
+    * ``max_queue`` — admission control: submissions beyond this queue
+      depth are shed as terminal REJECTED (default unbounded).
+    * ``default_ttl`` — deadline applied to every submit that does not
+      pass its own ``ttl`` (default none).
+    * ``nan_guard`` — per-stream quarantine of non-finite logits rows
+      (default on; costs one finiteness reduction per step).
+    * ``sleep`` — how the engine waits out retry backoff when nothing is
+      live (default: ``clock.advance`` when the clock has one — the sim
+      FakeClock — else ``time.sleep``).
     """
 
-    def __init__(self, executor: Executor, clock: Callable[[], float] = time.monotonic):
+    def __init__(
+        self,
+        executor: Executor,
+        clock: Callable[[], float] = time.monotonic,
+        *,
+        retry_budget: int | None = None,
+        backoff_s: float | None = None,
+        max_queue: int | None = None,
+        default_ttl: float | None = None,
+        max_evictions: int | None = None,
+        nan_guard: bool = True,
+        sleep: Callable[[float], None] | None = None,
+    ):
         self.executor = executor
         self.clock = clock
         self.allocator = SlotAllocator(executor.n_slots)
@@ -464,6 +568,28 @@ class Engine:
         self.done: dict[str, Request] = {}
         self.stats = EngineStats()
         self._n = 0
+        # -- supervision policy --
+        if retry_budget is None:
+            retry_budget = int(os.environ.get("REPRO_RETRY_BUDGET", "2"))
+        if backoff_s is None:
+            backoff_s = float(os.environ.get("REPRO_RETRY_BACKOFF", "0.05"))
+        if max_evictions is None:
+            max_evictions = int(os.environ.get("REPRO_MAX_EVICTIONS", "8"))
+        self.retry_budget = retry_budget
+        self.backoff_s = backoff_s
+        self.max_evictions = max_evictions if max_evictions > 0 else None
+        self.max_queue = max_queue
+        self.default_ttl = default_ttl
+        self.nan_guard = nan_guard
+        if sleep is None:
+            sleep = getattr(clock, "advance", None) or time.sleep
+        self._sleep = sleep
+        # Fast-path guards: a zero-fault, zero-deadline run must make
+        # exactly the same clock() calls as the pre-supervision engine
+        # (byte-identical stats under FakeClock) — so deadline sweeps and
+        # backoff scans only run when something armed them.
+        self._n_deadlines = 0  # non-terminal requests carrying a deadline
+        self._maybe_blocked = False  # a queued request may be in backoff
 
     # -- submission / results ----------------------------------------------
     def submit(
@@ -472,6 +598,8 @@ class Engine:
         max_new_tokens: int,
         extras: dict | None = None,
         rid: str | None = None,
+        *,
+        ttl: float | None = None,
     ) -> str:
         if max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
@@ -482,13 +610,30 @@ class Engine:
             r.rid == rid for r in self.queue
         ):
             raise ValueError(f"duplicate rid {rid!r}")
+        arrival = self.clock()
         req = Request(
             rid=rid,
             prompt=np.asarray(prompt),
             max_new_tokens=int(max_new_tokens),
             extras=dict(extras or {}),
-            arrival=self.clock(),
+            arrival=arrival,
         )
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            # load shedding at the door: terminal REJECTED, never queued —
+            # result() raises and the caller decides whether to resubmit
+            req.state = REJECTED
+            req.error = (
+                f"queue depth {len(self.queue)} >= max_queue {self.max_queue}"
+            )
+            req.done_t = arrival
+            self.done[rid] = req
+            self.stats.rejected += 1
+            return rid
+        if ttl is None:
+            ttl = self.default_ttl
+        if ttl is not None:
+            req.deadline = arrival + float(ttl)
+            self._n_deadlines += 1
         self.queue.append(req)
         return rid
 
@@ -496,7 +641,19 @@ class Engine:
         req = self.done.get(rid)
         if req is None:
             raise KeyError(f"request {rid!r} is not finished")
+        if req.state != DONE:
+            raise RuntimeError(f"request {rid!r} {req.state}: {req.error}")
         return req.output()
+
+    def status(self, rid: str) -> str:
+        """Current lifecycle state of ``rid`` (see module constants)."""
+        if rid in self.done:
+            return self.done[rid].state
+        if rid in self.running:
+            return RUNNING
+        if any(r.rid == rid for r in self.queue):
+            return QUEUED
+        raise KeyError(f"unknown request {rid!r}")
 
     @property
     def n_pending(self) -> int:
@@ -507,10 +664,19 @@ class Engine:
         """One scheduler tick: admit while slots are free, then one decode
         step over the live batch.  Returns rids finished this tick."""
         finished: list[str] = []
+        if self._n_deadlines:
+            self._expire(finished)
         self._admit(finished)
         live = self._live_by_slot()
         if live:
             self._decode(live, finished)
+        elif self.queue and self._maybe_blocked:
+            # nothing live and every queued request is in retry backoff:
+            # wait out the earliest not_before so run() cannot spin
+            now = self.clock()
+            wait = min(r.not_before for r in self.queue) - now
+            if wait > 0:
+                self._sleep(wait)
         return finished
 
     def run(self, max_steps: int | None = None) -> list[str]:
@@ -524,20 +690,34 @@ class Engine:
                 break
         return finished
 
-    def evict(self, rid: str) -> None:
-        """Preempt a live request: free its slot and put it back at the
+    def evict(self, rid: str, force: bool = False) -> bool:
+        """Preempt a live request: free its slot and put it back near the
         *front* of the queue.  Re-admission prefills prompt+generated, so
-        the greedy stream continues token-exactly."""
-        req = self.running.pop(rid, None)
+        the greedy stream continues token-exactly.
+
+        Starvation guard: once a request has been evicted
+        ``max_evictions`` times it is pinned — ``evict`` refuses and
+        returns False (``force=True`` overrides), so a short stream under
+        constant preemption pressure still finishes.  Re-queued
+        preemptees are age-ordered (see :meth:`_requeue`)."""
+        req = self.running.get(rid)
         if req is None:
             raise KeyError(f"request {rid!r} is not running")
+        if (
+            not force
+            and self.max_evictions is not None
+            and req.n_evictions >= self.max_evictions
+        ):
+            return False
+        self.running.pop(rid)
         self.allocator.free(req.slot)
         self.executor.free(req.slot)
         req.slot = None
         req.state = QUEUED
         req.n_evictions += 1
-        self.queue.appendleft(req)
+        self._requeue(req)
         self.stats.evicted += 1
+        return True
 
     # -- internals ----------------------------------------------------------
     def _live_by_slot(self) -> list[Request]:
@@ -548,13 +728,26 @@ class Engine:
 
     def _admit(self, finished: list[str]) -> None:
         while self.queue and self.allocator.n_free:
-            req = self.queue.popleft()
+            req = self._pop_admissible()
+            if req is None:  # every queued request is in retry backoff
+                return
             req.slot = self.allocator.alloc(req.rid)
+            notify = getattr(self.executor, "on_admit", None)
+            if notify is not None:  # e.g. FaultInjector slot→rid tracking
+                notify(req.rid, req.slot)
             self.stats.admitted += 1
             t0 = self.clock()
-            logits = self.executor.prefill_forward(
-                req.slot, req.prompt_full(), req.extras
-            )
+            try:
+                logits = self.executor.prefill_forward(
+                    req.slot, req.prompt_full(), req.extras
+                )
+            except Exception as exc:  # noqa: BLE001 — supervision boundary
+                t1 = self.clock()
+                self.stats.prefill_s += t1 - t0
+                # ran=False: the fault fired before the executor touched
+                # the row, so only the allocator slot is reclaimed
+                self._step_failure([req], exc, t1, finished, ran=False)
+                return  # let the backoff elapse before re-admitting
             t1 = self.clock()
             self.stats.prefill_s += t1 - t0
             tok = self.executor.sample(logits)  # (1, 1) / (1, K, 1)
@@ -562,6 +755,16 @@ class Engine:
             # the prefill-sampled token is a decoded token: count it and
             # its sampling time (the old ServeStats excluded both)
             self.stats.decode_s += t2 - t1
+            if self.nan_guard:
+                bad = self._bad_rows(logits)
+                if bad is not None and bad[0]:
+                    self.stats.quarantined += 1
+                    self._finish_terminal(
+                        req, FAILED,
+                        "non-finite prefill logits (stream quarantined)",
+                        t2, finished,
+                    )
+                    continue
             self._append_token(req, np.asarray(tok[0]))
             if req.first_token_t is None:
                 req.first_token_t = t2
@@ -580,17 +783,179 @@ class Engine:
         self.stats.occupancy[b] = self.stats.occupancy.get(b, 0) + 1
         self.stats.dispatch_per_step.append(self.executor.dispatch_for(b))
         t0 = self.clock()
-        logits = self.executor.decode_forward(slots, tokens)
-        toks = self.executor.sample(logits)  # (B,1)/(B,K,1)
+        try:
+            logits = self.executor.decode_forward(slots, tokens)
+            toks = self.executor.sample(logits)  # (B,1)/(B,K,1)
+        except Exception as exc:  # noqa: BLE001 — supervision boundary
+            t1 = self.clock()
+            self.stats.decode_s += t1 - t0
+            self._step_failure(live, exc, t1, finished, ran=True)
+            return
         t1 = self.clock()
         self.stats.decode_s += t1 - t0
+        bad = self._bad_rows(logits) if self.nan_guard else None
         for i, req in enumerate(live):
+            if bad is not None and bad[i]:
+                # divergence quarantine: fail this stream, not the batch
+                self.stats.quarantined += 1
+                self._finish_terminal(
+                    req, FAILED,
+                    "non-finite logits (stream quarantined)", t1, finished,
+                )
+                continue
             self._append_token(req, np.asarray(toks[i]))
             if len(req.generated) >= req.max_new_tokens:
                 self._complete(req, t1, finished)
-        self.stats.faust_dispatch = getattr(
-            self.executor, "faust_dispatch", self.stats.faust_dispatch
-        )
+        self._note_dispatch()
+
+    # -- supervision internals ----------------------------------------------
+    def _note_dispatch(self) -> None:
+        rep = getattr(self.executor, "faust_dispatch", None)
+        if rep is None:
+            rep = self.stats.faust_dispatch
+        elif rep is not self.stats.faust_dispatch and getattr(
+            rep, "demoted_from", None
+        ):
+            # a newly staged computation ran on a demoted backend
+            self.stats.demotions += 1
+        self.stats.faust_dispatch = rep
+
+    def _bad_rows(self, logits) -> np.ndarray | None:
+        """Non-finite mask over the batch rows of one step's logits, or
+        None when every row is finite (the overwhelmingly common case).
+        Executors may provide ``row_finite`` (device-side reduction)."""
+        fn = getattr(self.executor, "row_finite", None)
+        if fn is not None:
+            finite = np.asarray(fn(logits))
+        else:
+            step = np.asarray(logits[:, -1], dtype=np.float32)
+            finite = np.isfinite(step).reshape(step.shape[0], -1).all(axis=-1)
+        bad = ~finite
+        return bad if bad.any() else None
+
+    def _pop_admissible(self) -> Request | None:
+        """Next queued request whose retry backoff (``not_before``) has
+        elapsed; None when all are still blocked.  The fast path — no
+        request ever retried — pops the head with no clock read."""
+        if not self._maybe_blocked:
+            return self.queue.popleft()
+        now = self.clock()
+        self._maybe_blocked = any(r.not_before > now for r in self.queue)
+        for i, req in enumerate(self.queue):
+            if req.not_before <= now:
+                del self.queue[i]
+                return req
+        return None
+
+    def _requeue(self, req: Request) -> None:
+        """Return a preempted/retried request near the front of the
+        queue, age-ordered among the other preemptees already there
+        (oldest arrival first) — so one unlucky stream cannot be starved
+        behind a churn of younger evictees.  A single evictee into a
+        fresh queue degenerates to ``appendleft`` (the PR 7 behaviour)."""
+        i = 0
+        while (
+            i < len(self.queue)
+            and (self.queue[i].n_evictions or self.queue[i].n_retries)
+            and self.queue[i].arrival <= req.arrival
+        ):
+            i += 1
+        self.queue.insert(i, req)
+
+    def _step_failure(
+        self,
+        reqs: list[Request],
+        exc: Exception,
+        now: float,
+        finished: list[str],
+        *,
+        ran: bool,
+    ) -> None:
+        """A forward raised: preempt every affected request through the
+        eviction path (re-prefill of prompt+generated keeps retried
+        streams token-exact), with exponential backoff and a per-request
+        retry budget; over-budget requests turn terminal FAILED.
+        ``ran=False`` ⇒ the executor never touched the rows (fault fired
+        pre-launch), so only the allocator slots are reclaimed."""
+        for req in reqs:
+            self.running.pop(req.rid, None)
+            if req.slot is not None:
+                self.allocator.free(req.slot)
+                if ran:
+                    self.executor.free(req.slot)
+                req.slot = None
+            if req.n_retries < self.retry_budget:
+                req.n_retries += 1
+                self.stats.retries += 1
+                req.state = QUEUED
+                req.not_before = now + self.backoff_s * (
+                    2 ** (req.n_retries - 1)
+                )
+                self._maybe_blocked = True
+                self._requeue(req)
+            else:
+                self._finish_terminal(
+                    req, FAILED,
+                    f"{type(exc).__name__}: {exc} "
+                    f"(retry budget {self.retry_budget} exhausted)",
+                    now, finished,
+                )
+
+    def _expire(self, finished: list[str]) -> None:
+        """Sweep deadlines: expired running requests free their slot,
+        expired queued requests are shed — both terminal TIMED_OUT.
+        Only called when ``_n_deadlines`` is non-zero (one clock read)."""
+        now = self.clock()
+        expired = [
+            r for r in self.running.values()
+            if r.deadline is not None and now > r.deadline
+        ]
+        for req in expired:
+            self._finish_terminal(
+                req, TIMED_OUT,
+                f"deadline exceeded after {now - req.arrival:.4g}s",
+                now, finished,
+            )
+        if any(r.deadline is not None and now > r.deadline for r in self.queue):
+            keep: deque[Request] = deque()
+            for req in self.queue:
+                if req.deadline is not None and now > req.deadline:
+                    self._finish_terminal(
+                        req, TIMED_OUT,
+                        f"shed from queue after {now - req.arrival:.4g}s",
+                        now, finished,
+                    )
+                else:
+                    keep.append(req)
+            self.queue = keep
+
+    def _finish_terminal(
+        self,
+        req: Request,
+        state: str,
+        error: str,
+        now: float,
+        finished: list[str],
+    ) -> None:
+        """Move a request to a terminal non-DONE state, releasing its
+        slot if it holds one.  ``result()`` for it raises RuntimeError."""
+        if req.slot is not None:
+            self.allocator.free(req.slot)
+            self.executor.free(req.slot)
+            req.slot = None
+        self.running.pop(req.rid, None)
+        req.state = state
+        req.error = error
+        req.done_t = now
+        if req.deadline is not None:
+            self._n_deadlines -= 1
+            req.deadline = None
+        self.done[req.rid] = req
+        if state == FAILED:
+            self.stats.failed += 1
+        elif state == TIMED_OUT:
+            self.stats.timed_out += 1
+        finished.append(req.rid)
 
     def _append_token(self, req: Request, tok: np.ndarray) -> None:
         req.generated.append(tok)
@@ -603,6 +968,9 @@ class Engine:
         req.slot = None
         req.state = DONE
         req.done_t = now
+        if req.deadline is not None:
+            self._n_deadlines -= 1
+            req.deadline = None
         self.running.pop(req.rid, None)
         self.done[req.rid] = req
         self.stats.completed += 1

@@ -55,6 +55,12 @@ class ServeStats:
     faust_dispatch: Any = None
     # shard info: the serving mesh's {axis: size} (None off-mesh)
     mesh_axes: dict | None = None
+    # supervision outcomes surfaced from EngineStats (ISSUE 10): retried
+    # forwards, terminally failed/quarantined streams, degraded-mode
+    # dispatch demotions observed during this generate()
+    retries: int = 0
+    failed: int = 0
+    demotions: int = 0
 
     @property
     def tokens_per_s(self) -> float:
@@ -156,6 +162,9 @@ class Server:
             prefill_s=es.prefill_s,
             decode_s=es.decode_s,
             tokens_decoded=es.tokens_decoded,  # == b * n_new_tokens
+            retries=es.retries,
+            failed=es.failed,
+            demotions=es.demotions,
         )
         if ex.faust_dispatch is not None:
             self._faust_dispatch = ex.faust_dispatch

@@ -31,10 +31,32 @@ The swap itself is atomic at the scheduler's granularity: the engine is
 host-driven (``Engine.step()``), so calling :func:`hot_swap` between
 steps is the "between decode steps" point — no step ever sees a
 half-published chain.
+
+**Guarded swaps** (ISSUE 10).  Streaming makes swaps a routine runtime
+event, and the PALM4MSA iterates behind them are non-convex — a diverged
+or corrupted refresh must not reach the serving params.  ``hot_swap`` /
+``quantized_swap`` therefore accept a sketched relative-error *guard*
+(:func:`sketched_swap_err` — the same Gaussian-probe sketch as
+``StreamingFaust.estimate_drift``, O(s_tot·probes), never dense): when
+the candidate's RE vs the incumbent exceeds the threshold (or is
+non-finite — NaN poisoning), the swap is **rejected before publication**
+— the incumbent keeps serving, which makes rollback atomic by
+construction (there is no half-swapped state to restore), the report
+says why (``accepted=False``, ``rel_err``, ``reject_reason``), and
+``EngineStats.swap_rejects`` counts it.  The guard is off by default
+(``guard=None`` + unset ``REPRO_SWAP_GUARD``): legitimate refreshes may
+be arbitrarily far from a *stale* incumbent, so the threshold is policy,
+not physics — ``REPRO_SWAP_GUARD=1`` enables the default 0.5 (the same
+magnitude ``StreamingConfig.full_above`` uses to call a chain rotten),
+any float sets its own, and an explicit ``guard=`` always wins.
+``tests/test_engine_faults.py`` pins rejected-swap byte-exactness:
+engine output with a rejected regressed swap is identical to never
+attempting it.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 
 import jax.numpy as jnp
 import numpy as np
@@ -66,6 +88,14 @@ class SwapReport:
     # scales bit-for-bit — changed scales mean changed rounding points, so
     # equality with a from-scratch process is no longer structural.
     token_exact: bool = True
+    # Guard outcome: accepted=False means the candidate failed the
+    # sketched acceptance check and was NEVER published — the incumbent
+    # keeps serving (atomic rollback by construction).  rel_err is the
+    # sketched RE vs the incumbent whenever the guard ran (accepted or
+    # not); None when the guard was off.
+    accepted: bool = True
+    rel_err: float | None = None
+    reject_reason: str | None = None
 
 
 def classify_swap(old: BlockFaust, new: BlockFaust) -> str:
@@ -103,6 +133,78 @@ def classify_swap(old: BlockFaust, new: BlockFaust) -> str:
     return VALUES_ONLY
 
 
+def _guard_threshold(guard) -> float | None:
+    """Resolve the acceptance threshold: an explicit ``guard`` number
+    wins; ``None`` defers to ``REPRO_SWAP_GUARD`` (unset/``0``/``off`` →
+    guard disabled, ``1``/``on`` → the default 0.5, a float → itself);
+    ``False`` disables outright."""
+    if guard is False:
+        return None
+    if guard is not None:
+        return float(guard)
+    v = os.environ.get("REPRO_SWAP_GUARD", "").strip().lower()
+    if v in ("", "0", "off", "false", "no"):
+        return None
+    if v in ("1", "on", "true", "yes"):
+        return 0.5
+    return float(v)
+
+
+def _probe_op(chain):
+    """A FaustOp over either deployment representation, for probe applies
+    on the robust reference path (quantized chains dequantize)."""
+    from repro.api.operator import FaustOp
+
+    if isinstance(chain, BlockFaust):
+        return FaustOp.from_blockfaust(chain)
+    return FaustOp.from_packed(chain)
+
+
+def sketched_swap_err(
+    old, new, *, n_probes: int = 8, seed: int = 0
+) -> float:
+    """Sketched relative error of a candidate chain vs the incumbent:
+    ``‖X·new − X·old‖_F / ‖X·old‖_F`` over ``n_probes`` Gaussian probe
+    rows — O(s_tot · probes) per chain, never materializing either dense
+    matrix (the :meth:`~repro.streaming.online.StreamingFaust
+    .estimate_drift` sketch, pointed at two chains instead of a chain and
+    a target).  Deterministic in ``seed``.  NaN/Inf anywhere in the
+    candidate's probe image yields a non-finite RE — the guard treats
+    that as an automatic reject."""
+    import jax
+
+    op_old, op_new = _probe_op(old), _probe_op(new)
+    x = jax.random.normal(
+        jax.random.PRNGKey(seed), (n_probes, op_old.shape[0]), jnp.float32
+    )
+    y_old = op_old.apply(x, backend="bsr")
+    y_new = op_new.apply(x, backend="bsr")
+    denom = jnp.maximum(jnp.linalg.norm(y_old), 1e-12)
+    return float(jnp.linalg.norm(y_new - y_old) / denom)
+
+
+def _guard_check(old, candidate, guard, n_probes, seed):
+    """(rel_err, reject_reason) — reason is None when the swap may
+    publish.  ``guard`` is the resolved threshold (None ⇒ guard off)."""
+    if guard is None:
+        return None, None
+    rel_err = sketched_swap_err(old, candidate, n_probes=n_probes, seed=seed)
+    if not np.isfinite(rel_err):
+        return rel_err, "non-finite candidate (NaN/Inf in probe image)"
+    if rel_err > guard:
+        return rel_err, (
+            f"sketched RE {rel_err:.4g} vs incumbent exceeds guard "
+            f"threshold {guard:.4g}"
+        )
+    return rel_err, None
+
+
+def _count_reject(target) -> None:
+    stats = getattr(target, "stats", None)
+    if stats is not None and hasattr(stats, "swap_rejects"):
+        stats.swap_rejects += 1
+
+
 def _executor_of(target):
     """Accept an Engine, a Server, or a bare executor."""
     ex = getattr(target, "executor", None)  # Engine
@@ -113,7 +215,14 @@ def _executor_of(target):
     raise TypeError(f"cannot hot-swap into {type(target).__name__}")
 
 
-def hot_swap(target, new: BlockFaust) -> SwapReport:
+def hot_swap(
+    target,
+    new: BlockFaust,
+    *,
+    guard: float | bool | None = None,
+    n_probes: int = 8,
+    seed: int = 0,
+) -> SwapReport:
     """Publish ``new`` as the serving unembedding chain of ``target``
     (an :class:`~repro.runtime.engine.Engine`,
     :class:`~repro.runtime.server.Server`, or
@@ -121,7 +230,14 @@ def hot_swap(target, new: BlockFaust) -> SwapReport:
 
     Call between engine steps / ``generate()`` calls.  Returns a
     :class:`SwapReport`; bumps ``EngineStats.swaps`` when the target is an
-    engine."""
+    engine.
+
+    ``guard`` arms the sketched acceptance check (module docstring): a
+    candidate whose probe RE vs the incumbent exceeds the threshold — or
+    is non-finite — is rejected *before* publication: the incumbent keeps
+    serving untouched, ``EngineStats.swap_rejects`` is bumped, and the
+    report carries ``accepted=False`` + the reason.  ``None`` defers to
+    ``REPRO_SWAP_GUARD`` (off by default), ``False`` disables."""
     from repro.api import autotune
 
     ex = _executor_of(target)
@@ -129,6 +245,21 @@ def hot_swap(target, new: BlockFaust) -> SwapReport:
     if old is None:
         raise ValueError("target serves no FAµST unembedding chain")
     kind = classify_swap(old, new)
+    rel_err, reject = _guard_check(
+        old, new, _guard_threshold(guard), n_probes, seed
+    )
+    if reject is not None:
+        _count_reject(target)
+        return SwapReport(
+            kind=kind,
+            s_tot_before=int(old.s_tot),
+            s_tot_after=int(new.s_tot),
+            retrace=False,
+            invalidated=0,
+            accepted=False,
+            rel_err=rel_err,
+            reject_reason=reject,
+        )
     invalidated = 0
     if kind == REPACK:
         # Old-signature timings are stale.  s_tot change ⇒ the key moves
@@ -154,6 +285,7 @@ def hot_swap(target, new: BlockFaust) -> SwapReport:
             for fo, fn in zip(old.factors, new.factors)
         ),
         invalidated=invalidated,
+        rel_err=rel_err,
     )
 
 
@@ -176,7 +308,14 @@ def requantize_like(old: PackedChain, new) -> PackedChain:
     return quantize_chain(pc, dtype, scheme)
 
 
-def quantized_swap(old: PackedChain, new) -> tuple[PackedChain, SwapReport]:
+def quantized_swap(
+    old: PackedChain,
+    new,
+    *,
+    guard: float | bool | None = None,
+    n_probes: int = 8,
+    seed: int = 0,
+) -> tuple[PackedChain, SwapReport]:
     """Values-only-style swap for a *quantized* serving chain.
 
     Re-quantizes the refreshed chain ``new`` (f32 ``PackedChain`` or
@@ -190,10 +329,32 @@ def quantized_swap(old: PackedChain, new) -> tuple[PackedChain, SwapReport]:
     than the one it replaces, so post-swap decodes are equivalent to a
     fresh process but not to the pre-swap stream.  Returns the quantized
     replacement chain and the report — publishing it (engine param flip)
-    is the caller's step, same as any values-only swap."""
+    is the caller's step, same as any values-only swap.
+
+    ``guard`` arms the sketched acceptance check on the *requantized*
+    candidate (post-rounding — the guard sees exactly what would serve)
+    vs the quantized incumbent; a rejected candidate returns ``(old,
+    report)`` with ``accepted=False`` — the incumbent chain is handed
+    back, so publishing the returned chain is always safe."""
     from repro.api import autotune
 
     new_q = requantize_like(old, new)
+    rel_err, reject = _guard_check(
+        old, new_q, _guard_threshold(guard), n_probes, seed
+    )
+    if reject is not None:
+        return old, SwapReport(
+            kind=VALUES_ONLY,
+            s_tot_before=int(np.prod(old.values.shape)),
+            s_tot_after=int(np.prod(old.values.shape)),
+            retrace=False,
+            invalidated=0,
+            requantized=True,
+            token_exact=True,  # nothing published: the stream is untouched
+            accepted=False,
+            rel_err=rel_err,
+            reject_reason=reject,
+        )
     if old.plan == new_q.plan and np.array_equal(
         np.asarray(old.in_idx), np.asarray(new_q.in_idx)
     ):
@@ -216,6 +377,7 @@ def quantized_swap(old: PackedChain, new) -> tuple[PackedChain, SwapReport]:
         invalidated=invalidated,
         requantized=True,
         token_exact=token_exact,
+        rel_err=rel_err,
     )
 
 

@@ -21,7 +21,13 @@ That design makes the two properties the tests need fall out directly:
   the sim fails loudly instead of silently serving garbage.
 
 Used by ``tests/test_engine_sim.py`` (differential + scripted-trace
-tests) and ``tests/test_engine_sched.py`` (seeded property sweeps).
+tests), ``tests/test_engine_sched.py`` (seeded property sweeps), and
+``tests/test_engine_faults.py`` (supervision proofs: the harness composes
+with :class:`repro.runtime.faults.FaultInjector` wrapped around a
+``SimExecutor`` — the injector forwards the hygiene assertions untouched,
+``FakeClock.advance`` gives ``slow_step`` faults deterministic time, and
+:func:`reference_stream` stays the oracle surviving streams must match
+token-exactly under every fault schedule).
 """
 from __future__ import annotations
 

@@ -139,6 +139,61 @@ def test_checkpoint_atomicity_no_tmp_left(tmp_path):
     assert mgr.latest_step() == 5
 
 
+def test_checkpoint_background_write_failure_is_raised(tmp_path, monkeypatch):
+    """ISSUE 10 regression: a background write that raises (disk full,
+    permissions) must surface from wait() — not die silently in the
+    daemon thread — and must not publish the step."""
+    import repro.checkpoint.manager as mgr_mod
+
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    tree = {"x": jnp.ones((2, 2))}
+
+    def broken_save(path, data):
+        raise OSError("No space left on device")
+
+    monkeypatch.setattr(mgr_mod.np, "save", broken_save)
+    mgr.save_async(1, tree)
+    with pytest.raises(RuntimeError, match="background checkpoint write"):
+        mgr.wait()
+    monkeypatch.undo()
+    assert mgr.all_steps() == []  # the failed step was never renamed in
+    # the failure was consumed: the manager is usable again
+    mgr.save_async(2, tree)
+    mgr.wait()
+    assert mgr.all_steps() == [2]
+
+
+def test_checkpoint_corruption_detected_and_fallback(tmp_path):
+    """ISSUE 10 regression: a bit-rotted shard fails restore with
+    CorruptCheckpointError; latest_step()/restore_latest skip the corrupt
+    step and fall back to the newest intact one."""
+    from repro.checkpoint.manager import CorruptCheckpointError
+
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3)}
+    for step in (1, 2):
+        mgr.save_async(step, {"a": tree["a"] * step}, extra={"s": step})
+        mgr.wait()
+    # bit-rot step 2: rewrite one shard as a valid .npy with wrong bytes,
+    # so only the sha256 check (not np.load) can catch it
+    d2 = os.path.join(tmp_path, "2")
+    (shard,) = [f for f in os.listdir(d2) if f.endswith(".npy")]
+    np.save(os.path.join(d2, shard), np.full((2, 3), 7.0, np.float32))
+    assert not mgr.verify(2)
+    assert mgr.verify(1)
+    with pytest.raises(CorruptCheckpointError, match="sha256 mismatch"):
+        mgr.restore(2, tree)
+    assert mgr.latest_step() == 1  # newest *intact*
+    assert mgr.latest_step(verified=False) == 2  # raw listing still sees it
+    state, extra, step = mgr.restore_latest(tree)
+    assert step == 1 and extra["s"] == 1
+    np.testing.assert_array_equal(np.asarray(state["a"]), np.asarray(tree["a"]))
+    # a missing shard is just as terminal for direct restore
+    os.remove(os.path.join(d2, shard))
+    with pytest.raises(CorruptCheckpointError, match="unreadable"):
+        mgr.restore(2, tree)
+
+
 # --- trainer runtime -----------------------------------------------------------
 
 
